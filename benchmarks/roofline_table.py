@@ -1,0 +1,58 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md §Roofline
+table + CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def markdown_table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+           "MODEL_FLOPS | useful-FLOPs frac | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for c in cells:
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3g}s | "
+            f"{r['t_memory_s']:.3g}s | {r['t_collective_s']:.3g}s | "
+            f"**{r['dominant']}** | {r['model_flops_global']:.3g} | "
+            f"{r['useful_flops_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for mesh in ("single", "pod"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        n_ok = len(cells)
+        worst = min(cells, key=lambda c: c["roofline"]["roofline_fraction"])
+        best = max(cells, key=lambda c: c["roofline"]["roofline_fraction"])
+        rows.append((f"roofline.{mesh}.cells_compiled", float(n_ok),
+                     "all (arch x shape) cells lower+compile"))
+        rows.append((f"roofline.{mesh}.best_fraction",
+                     best["roofline"]["roofline_fraction"],
+                     f"{best['arch']}/{best['shape']}"))
+        rows.append((f"roofline.{mesh}.worst_fraction",
+                     worst["roofline"]["roofline_fraction"],
+                     f"{worst['arch']}/{worst['shape']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table("single"))

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set BENCH_N / BENCH_APP_N to scale
+(defaults sized for a single CPU core; the operations are row-parallel, see
+DESIGN.md §8 for the pod-scale throughput argument).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (fig1_growth, roofline_table, table1_lifecycle,
+                            table2_incremental, table3_split,
+                            table4_application)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table1_lifecycle, table2_incremental, table3_split,
+                table4_application, fig1_growth, roofline_table):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},NaN,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Assigned-architecture configs (exact published dims) + paper workload."""
+from .base import (ARCH_IDS, SHAPES, ModelConfig, RunConfig, ShapeConfig,
+                   get_config, get_smoke_config, shapes_for)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "RunConfig", "ShapeConfig",
+           "get_config", "get_smoke_config", "shapes_for"]

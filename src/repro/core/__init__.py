@@ -1,0 +1,25 @@
+"""GeStore core: the paper's contribution as a composable library.
+
+Layers: VersionedStore (MVCC columnar storage) -> change detection ->
+increment engine (generate/merge around unmodified tools) -> plugins/parsers
+-> cache + system tables -> neural-BLAST incremental search.
+"""
+from .store import (FieldSchema, Increment, VersionedStore, VersionInfo,
+                    VersionView, KIND_DELETED, KIND_NEW, KIND_UPDATED, TS_MAX)
+from .tables import SystemTables
+from .cache import VersionCache, descriptor
+from .plugins import (FileGenerator, FileParser, OutputMerger, PluginRegistry,
+                      REGISTRY, ToolPlugin)
+from .mergers import AppendMerger, BlastEvalueMerger
+from .increment import GeneratedInput, GeStore
+from .search import EmbeddingSearchDB, SearchResult
+from .change import SignificanceProfile, classify
+
+__all__ = [
+    "FieldSchema", "Increment", "VersionedStore", "VersionInfo", "VersionView",
+    "KIND_DELETED", "KIND_NEW", "KIND_UPDATED", "TS_MAX", "SystemTables",
+    "VersionCache", "descriptor", "FileGenerator", "FileParser", "OutputMerger",
+    "PluginRegistry", "REGISTRY", "ToolPlugin", "AppendMerger",
+    "BlastEvalueMerger", "GeneratedInput", "GeStore", "EmbeddingSearchDB",
+    "SearchResult", "SignificanceProfile", "classify",
+]

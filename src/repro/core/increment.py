@@ -1,0 +1,168 @@
+"""Incremental-compute engine (paper §III.A + §III.G).
+
+The workflow-manager-facing interface is two calls (paper: `generateFiles` /
+`mergeFiles`): before running a tool, generate its input/meta-database files
+(full version or increment, cache-aware); after running it, merge the
+partial output into the previous result. The tool itself is UNMODIFIED — it
+just reads and writes files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable
+
+from .cache import VersionCache, descriptor
+from .plugins import PluginRegistry, ToolPlugin
+from .store import Increment, VersionedStore, KIND_DELETED, KIND_NEW, KIND_UPDATED
+from .tables import SystemTables
+
+
+@dataclasses.dataclass
+class GeneratedInput:
+    path: str
+    mode: str                 # "full" | "increment" | "cached"
+    t0: int
+    t1: int
+    n_entries: int
+    context: dict             # merge context (db sizes, deleted/updated keys)
+
+
+class GeStore:
+    """Facade owning stores + cache + system tables + plugin registry."""
+
+    def __init__(self, root: str, registry: PluginRegistry):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.tables = SystemTables(os.path.join(root, "sys"))
+        self.cache = VersionCache(os.path.join(root, "cache"), self.tables)
+        self.registry = registry
+        self.stores: dict[str, VersionedStore] = {}
+
+    # -- data-feeder interface (Fig. 3 left) --------------------------------
+    def add_release(self, store_name: str, ts: int, text: str, *,
+                    parser_name: str, label: str = "",
+                    full_release: bool = True):
+        parser = self.registry.parsers[parser_name]
+        keys, table = parser.parse_text(text)
+        store = self.stores.get(store_name)
+        if store is None:
+            store = VersionedStore(store_name, parser.schema(),
+                                   capacity=max(16, len(keys)))
+            self.stores[store_name] = store
+        info = store.update(ts, keys, table, label=label,
+                            full_release=full_release)
+        self.tables.record_update(store_name, info)
+        return info
+
+    # -- workflow-manager interface (Fig. 3 right) ---------------------------
+    def generate_files(self, tool: str, store_name: str, *, t_version: int,
+                       t_last: int | None = None,
+                       key_filter: str | None = None,
+                       run_id: str = "") -> GeneratedInput:
+        """paper `generateFiles`: full version if t_last is None, else the
+        increment (t_last, t_version]."""
+        plugin = self.registry.tools[tool]
+        parser = self.registry.parsers[plugin.generator.parser]
+        store = self.stores[store_name]
+        mode = "full" if t_last is None else "increment"
+        desc = descriptor(store_name, -1 if t_last is None else t_last,
+                          t_version, filter_expr=key_filter or "",
+                          plugin=tool, params=plugin.params)
+        context = self._merge_context(store, plugin, t_last, t_version)
+
+        cached = self.cache.get(desc)
+        if cached is not None:
+            n = sum(1 for _ in open(cached)) if os.path.exists(cached) else 0
+            return GeneratedInput(cached, "cached", t_last or -1, t_version,
+                                  n, context)
+
+        if mode == "full":
+            view = store.get_version(t_version,
+                                     fields=list(plugin.generator.output_fields),
+                                     key_filter=key_filter)
+            text = parser.format_view(view)
+            n_entries = len(view)
+        else:
+            inc = store.get_increment(
+                t_last, t_version,
+                significant_fields=list(plugin.generator.significant_fields),
+                fields=list(plugin.generator.output_fields))
+            live = inc.kind != KIND_DELETED
+            sub = Increment(inc.t0, inc.t1,
+                            [k for k, m in zip(inc.keys, live) if m],
+                            inc.row_idx[live], inc.kind[live],
+                            {f: v[live] for f, v in inc.values.items()})
+            if key_filter is not None:
+                import re
+                pat = re.compile(key_filter.encode())
+                m = [bool(pat.search(k)) for k in sub.keys]
+                import numpy as np
+                m = np.asarray(m, bool) if m else np.zeros(0, bool)
+                sub = Increment(sub.t0, sub.t1,
+                                [k for k, mm in zip(sub.keys, m) if mm],
+                                sub.row_idx[m], sub.kind[m],
+                                {f: v[m] for f, v in sub.values.items()})
+            text = parser.format_view(sub)
+            n_entries = len(sub)
+
+        path = self.cache.put(desc, lambda p: open(p, "w").write(text),
+                              plugin=tool, suffix=".txt")
+        return GeneratedInput(path, mode, t_last or -1, t_version, n_entries,
+                              context)
+
+    def merge_files(self, tool: str, previous: str, partial: str, *,
+                    context: dict) -> str:
+        """paper `mergeFiles`."""
+        plugin = self.registry.tools[tool]
+        if plugin.merger is None:
+            return previous + partial
+        return plugin.merger.merge(previous, partial, context=context)
+
+    # -- provenance-recorded tool execution ----------------------------------
+    def run_tool(self, tool: str, store_name: str,
+                 tool_fn: Callable[[str], str], *, t_version: int,
+                 t_last: int | None = None, previous_output: str = "",
+                 key_filter: str | None = None) -> tuple[str, GeneratedInput]:
+        """Generate inputs -> run the unmodified tool -> merge outputs,
+        recording provenance in the `runs` table."""
+        run_id = f"{tool}-{store_name}-{t_version}-{time.time_ns()}"
+        gen = self.generate_files(tool, store_name, t_version=t_version,
+                                  t_last=t_last, key_filter=key_filter,
+                                  run_id=run_id)
+        self.tables.start_run(run_id, tool, [gen.path],
+                              {"t_version": t_version, "t_last": t_last,
+                               "mode": gen.mode})
+        partial = tool_fn(gen.path)
+        if t_last is None:
+            merged = partial
+        else:
+            merged = self.merge_files(tool, previous_output, partial,
+                                      context=gen.context)
+        self.tables.finish_run(run_id, [])
+        return merged, gen
+
+    # -- helpers ---------------------------------------------------------------
+    def _merge_context(self, store: VersionedStore, plugin: ToolPlugin,
+                       t_last: int | None, t_version: int) -> dict:
+        ctx: dict = dict(plugin.params)   # tool knobs (e.g. max_hits_per_query)
+        if t_last is None:
+            return ctx
+        inc = store.get_increment(
+            t_last, t_version,
+            significant_fields=list(plugin.generator.significant_fields),
+            fields=[])
+        ctx["deleted_keys"] = [k for k, kd in zip(inc.keys, inc.kind)
+                               if kd == KIND_DELETED]
+        ctx["updated_keys"] = [k for k, kd in zip(inc.keys, inc.kind)
+                               if kd == KIND_UPDATED]
+        ctx["new_keys"] = [k for k, kd in zip(inc.keys, inc.kind)
+                           if kd == KIND_NEW]
+        # database-size context for e-value style corrections
+        if "length" in store.fields:
+            old = store.get_version(t_last, fields=["length"])
+            new = store.get_version(t_version, fields=["length"])
+            ctx["db_size_old"] = int(old.values["length"].sum())
+            ctx["db_size_new"] = int(new.values["length"].sum())
+        return ctx

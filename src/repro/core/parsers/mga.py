@@ -1,0 +1,58 @@
+"""MetaGeneAnnotator (MGA) output parser.
+
+MGA emits, per input contig, a `# <contig>` header followed by predicted
+gene rows: `gene_id start end strand frame complete score ...`. One store
+row per predicted gene, keyed contig|gene_id.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .._schema_compat import FieldSchema
+from ..plugins import FileParser
+
+
+class MgaParser(FileParser):
+    format_name = "mga"
+
+    def entry_pattern(self):
+        return (r"^# ", r"(?=^# )|\Z")
+
+    def schema(self):
+        return [
+            FieldSchema("coords", 3, "int32"),   # start, end, strand(+1/-1)
+            FieldSchema("score", 1, "float32"),
+        ]
+
+    def split_entry(self, entry: str):
+        # one *contig block*; framework-level parse_text flattens genes
+        raise NotImplementedError("use parse_text (block format)")
+
+    def parse_text(self, text: str):
+        keys, coords, scores = [], [], []
+        contig = ""
+        for line in text.splitlines():
+            if line.startswith("# gc") or line.startswith("# self"):
+                continue  # MGA stats headers
+            if line.startswith("#"):
+                contig = line[1:].strip().split()[0]
+                continue
+            cols = line.split()
+            if len(cols) < 7:
+                continue
+            gene_id, start, end, strand = cols[0], int(cols[1]), int(cols[2]), cols[3]
+            score = float(cols[6])
+            keys.append(f"{contig}|{gene_id}".encode())
+            coords.append(np.asarray([start, end, 1 if strand == "+" else -1],
+                                     np.int32))
+            scores.append(np.asarray([score], np.float32))
+        if not keys:
+            return [], {"coords": np.zeros((0, 3), np.int32),
+                        "score": np.zeros((0, 1), np.float32)}
+        return keys, {"coords": np.stack(coords), "score": np.stack(scores)}
+
+    def format_entry(self, key: bytes, row: dict[str, np.ndarray]) -> str:
+        contig, gene = key.decode().split("|")
+        s, e, st = (int(v) for v in row["coords"])
+        return (f"# {contig}\n{gene}\t{s}\t{e}\t{'+' if st > 0 else '-'}\t0\t11"
+                f"\t{float(row['score'][0]):.2f}\n")

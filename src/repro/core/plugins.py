@@ -1,0 +1,142 @@
+"""GeStore plugin framework (paper §III.F).
+
+A tool plugin = (file parsers, file generator, output merger). The parser
+interface mirrors the paper's six methods: entry delimiters, entry->columns
+split, version compare, required-element validation, Put-object generation
+(here: (key, field-row dict)), and output formatting. Plugins are small —
+the framework owns storage, change detection, generation and merging.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from .store import FieldSchema, Increment, VersionedStore, VersionView
+
+
+class FileParser(abc.ABC):
+    """One parser per file format (§III.F.1). Subclasses are format-specific;
+    everything tool-specific lives in the generator/merger."""
+
+    #: format name (registry key)
+    format_name: str = ""
+
+    # (i) regular expressions delimiting an entry in the file
+    @abc.abstractmethod
+    def entry_pattern(self) -> tuple[str, str]:
+        """(start_regex, end_regex) for one entry."""
+
+    # (ii) split an entry into columns
+    @abc.abstractmethod
+    def split_entry(self, entry: str) -> tuple[bytes, dict[str, np.ndarray]]:
+        """entry text -> (row key, field -> fixed-width row)."""
+
+    # schema of the columns this parser emits
+    @abc.abstractmethod
+    def schema(self) -> list[FieldSchema]:
+        ...
+
+    # (iii) compare two versions of an entry (fingerprint equality on fields)
+    def compare(self, a: dict[str, np.ndarray], b: dict[str, np.ndarray],
+                significant: Sequence[str] | None = None) -> bool:
+        names = significant if significant is not None else list(a)
+        return all(np.array_equal(a[n], b[n]) for n in names)
+
+    # (iv) check an entry contains every element the tool needs
+    def validate(self, row: dict[str, np.ndarray],
+                 required: Sequence[str]) -> bool:
+        return all(n in row and np.asarray(row[n]).size > 0 for n in required)
+
+    # (v) generate a Put object (key + column dict, HBase Put analogue)
+    def to_put(self, entry: str) -> tuple[bytes, dict[str, np.ndarray]]:
+        return self.split_entry(entry)
+
+    # (vi) generate output in other formats
+    @abc.abstractmethod
+    def format_entry(self, key: bytes, row: dict[str, np.ndarray]) -> str:
+        """row -> file text (inverse of split_entry up to canonicalization)."""
+
+    # -- framework-provided bulk helpers (plugins get these for free) --------
+    def parse_text(self, text: str) -> tuple[list[bytes], dict[str, np.ndarray]]:
+        keys, rows = [], []
+        for entry in self.iter_entries(text):
+            k, r = self.split_entry(entry)
+            keys.append(k)
+            rows.append(r)
+        if not rows:
+            return [], {f.name: np.zeros((0, f.width), f.np_dtype)
+                        for f in self.schema()}
+        table = {name: np.stack([r[name] for r in rows])
+                 for name in rows[0]}
+        return keys, table
+
+    def iter_entries(self, text: str) -> Iterable[str]:
+        import re
+        start_re, end_re = self.entry_pattern()
+        start = re.compile(start_re, re.M)
+        starts = [m.start() for m in start.finditer(text)]
+        if not starts:
+            return []
+        starts.append(len(text))
+        return [text[starts[i]:starts[i + 1]] for i in range(len(starts) - 1)]
+
+    def format_view(self, view: VersionView | Increment) -> str:
+        out = []
+        for i, k in enumerate(view.keys):
+            row = {n: v[i] for n, v in view.values.items()}
+            out.append(self.format_entry(k, row))
+        return "".join(out)
+
+
+@dataclasses.dataclass
+class FileGenerator:
+    """Tool-specific input/meta-data file generation (§III.F.2): which parser
+    per file, which fields the tool reads, which fields are significant for
+    change detection (the BLAST lesson: annotation edits don't change
+    alignments)."""
+    parser: str                      # format registry key
+    output_fields: Sequence[str]     # fields written to the generated file
+    significant_fields: Sequence[str]  # fields that trigger an increment
+    required_fields: Sequence[str] = ()
+
+
+class OutputMerger(abc.ABC):
+    """Tool-specific incremental-output merge (§III.F.3)."""
+
+    @abc.abstractmethod
+    def merge(self, previous: str, partial: str, *, context: dict) -> str:
+        """Merge a partial (incremental) tool output into the previous full
+        output, fixing aggregate fields (e.g. BLAST e-values)."""
+
+
+@dataclasses.dataclass
+class ToolPlugin:
+    name: str
+    generator: FileGenerator
+    merger: OutputMerger | None = None
+    #: extra free-form parameters recorded into cache descriptors
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+class PluginRegistry:
+    def __init__(self):
+        self.parsers: dict[str, FileParser] = {}
+        self.tools: dict[str, ToolPlugin] = {}
+
+    def register_parser(self, parser: FileParser) -> FileParser:
+        assert parser.format_name, "parser needs format_name"
+        self.parsers[parser.format_name] = parser
+        return parser
+
+    def register_tool(self, plugin: ToolPlugin) -> ToolPlugin:
+        self.tools[plugin.name] = plugin
+        return plugin
+
+    def parser_for(self, tool: str) -> FileParser:
+        return self.parsers[self.tools[tool].generator.parser]
+
+
+REGISTRY = PluginRegistry()

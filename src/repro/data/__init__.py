@@ -1,0 +1,1 @@
+"""Data substrate: tokenizer, versioned corpus, deterministic pipeline."""

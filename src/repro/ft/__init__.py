@@ -1,0 +1,1 @@
+"""Fault tolerance: delta checkpoints, elastic resharding, stragglers."""

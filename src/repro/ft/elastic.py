@@ -1,0 +1,40 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints are mesh-agnostic (host-row chunks in the versioned store), so
+elasticity reduces to (1) choosing a new mesh from the surviving device set,
+(2) recomputing shardings from the same logical-axis rules on that mesh,
+(3) device_put at restore. Data order is preserved by carrying (step,
+dataset version ts) in the train metadata, so a 512->256 shrink replays no
+data and loses at most the steps since the last (async, delta-cheap)
+checkpoint.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.rules import tree_shardings
+
+
+def choose_mesh_shape(n_devices: int, prefer_model: int = 16) -> tuple:
+    """Largest (data, model) grid for the surviving devices: keep TP width
+    if possible (weights layouts unchanged), shrink DP."""
+    model = prefer_model
+    while model > 1 and (n_devices % model or n_devices // model < 1):
+        model //= 2
+    return (max(n_devices // model, 1), model)
+
+
+def remesh(devices=None, prefer_model: int = 16):
+    devices = devices if devices is not None else jax.devices()
+    data, model = choose_mesh_shape(len(devices), prefer_model)
+    import numpy as np
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+    return Mesh(grid, ("data", "model"))
+
+
+def restore_elastic(ckpt_manager, step: int, like, spec_tree, mesh):
+    """CheckpointManager.restore with shardings recomputed for `mesh`."""
+    shardings = tree_shardings(spec_tree, mesh)
+    return ckpt_manager.restore(step, like=like, mesh=mesh,
+                                shardings=shardings)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for GeStore-JAX hot spots.
+
+Storage-layer kernels (the paper's hot spots): fingerprint, version_select,
+delta_codec, masked_merge. Framework hot spot (beyond-paper): flash_attention.
+Each kernel module pairs with a pure-jnp oracle in ref.py; ops.py exposes the
+jit'd public API.
+"""
+from . import ops  # noqa: F401
+from .ops import (  # noqa: F401
+    delta_pack, delta_unpack, fingerprint, fingerprint_rows, flash_attention,
+    masked_cumsum, masked_merge, narrow_dtype, version_select,
+)

@@ -1,0 +1,24 @@
+"""Kernel-dispatch compatibility helpers.
+
+TPU is the TARGET for every kernel here; on the CPU backend we validate the
+kernel bodies via Pallas interpret mode (the kernel Python executes on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(None)
+def interpret_default() -> bool:
+    """Run pallas_call in interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

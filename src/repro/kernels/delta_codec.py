@@ -1,0 +1,128 @@
+"""Pallas delta-codec kernels (versioned-cell storage compression, §III.B).
+
+GeStore stores a set of database versions with delta compression (HBase
+timestamped cells + Snappy). Our on-disk cell segments store, for each
+updated row, the delta against the row's previous value: arithmetic
+difference for integer fields and bitwise XOR for float fields (unchanged
+exponent/mantissa bytes zero out, which downstream byte-level entropy coding
+exploits). Both directions are single-pass streaming VPU kernels; pack
+additionally emits the per-tile max |delta| so the host can narrow int32
+deltas to int16/int8 segments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from ._compat import cdiv, interpret_default
+
+TILE_N = 512
+
+
+def _pack_int_kernel(new_ref, old_ref, delta_ref, maxabs_ref):
+    d = new_ref[:, :] - old_ref[:, :]
+    delta_ref[:, :] = d
+    maxabs_ref[0] = jnp.max(jnp.abs(d))
+
+
+def _pack_xor_kernel(new_ref, old_ref, delta_ref, nz_ref):
+    d = new_ref[:, :] ^ old_ref[:, :]
+    delta_ref[:, :] = d
+    nz_ref[0] = jnp.sum((d != 0).astype(jnp.int32))
+
+
+def _unpack_int_kernel(delta_ref, old_ref, new_ref, stat_ref):
+    new_ref[:, :] = delta_ref[:, :] + old_ref[:, :]
+    stat_ref[0] = 0
+
+
+def _unpack_xor_kernel(delta_ref, old_ref, new_ref, stat_ref):
+    new_ref[:, :] = delta_ref[:, :] ^ old_ref[:, :]
+    stat_ref[0] = 0
+
+
+def _run_2d(kernel, a, b, out_dtypes, *, interpret):
+    n, w = a.shape
+    n_pad = cdiv(max(n, 1), TILE_N) * TILE_N
+    if n_pad != n:
+        a = jnp.pad(a, ((0, n_pad - n), (0, 0)))
+        b = jnp.pad(b, ((0, n_pad - n), (0, 0)))
+    n_tiles = n_pad // TILE_N
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, w), out_dtypes[0]),
+            jax.ShapeDtypeStruct((n_tiles,), out_dtypes[1]),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return outs[0][:n], outs[1]
+
+
+def _as_int_lanes(x: jax.Array) -> tuple[jax.Array, jnp.dtype]:
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        ib = {4: jnp.int32, 2: jnp.int16}[x.dtype.itemsize]
+        return x.view(ib), ib
+    return x, x.dtype
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_pack(new: jax.Array, old: jax.Array, *, interpret: bool | None = None):
+    """Pack (new, old) -> (delta, stat). Floats: XOR lanes + nonzero count;
+    ints: arithmetic delta + per-tile max|delta| (for narrowing).
+    interpret=None: kernel on TPU, jitted ref on CPU; True: force kernel."""
+    if interpret is None:
+        if interpret_default():
+            d = ref.ref_delta_pack(new, old)
+            di, _ = _as_int_lanes(d)
+            stat = (jnp.sum((di != 0).astype(jnp.int32))[None]
+                    if jnp.issubdtype(new.dtype, jnp.floating)
+                    else jnp.max(jnp.abs(di))[None])
+            return d, stat
+        interpret = False
+    is_float = jnp.issubdtype(new.dtype, jnp.floating)
+    a, ib = _as_int_lanes(new)
+    b, _ = _as_int_lanes(old)
+    kernel = _pack_xor_kernel if is_float else _pack_int_kernel
+    delta, stat = _run_2d(kernel, a, b, (ib, jnp.int32), interpret=interpret)
+    if is_float:
+        delta = delta.view(new.dtype)
+    return delta, stat
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_unpack(delta: jax.Array, old: jax.Array, *, interpret: bool | None = None):
+    if interpret is None:
+        if interpret_default():
+            return ref.ref_delta_unpack(delta, old)
+        interpret = False
+    is_float = jnp.issubdtype(delta.dtype, jnp.floating)
+    a, ib = _as_int_lanes(delta)
+    b, _ = _as_int_lanes(old)
+    kernel = _unpack_xor_kernel if is_float else _unpack_int_kernel
+    new, _ = _run_2d(kernel, a, b, (ib, jnp.int32), interpret=interpret)
+    if is_float:
+        new = new.view(delta.dtype)
+    return new
+
+
+def narrow_dtype(maxabs: int, base=jnp.int32):
+    """Pick the narrowest int dtype that can hold every delta in a segment."""
+    if maxabs < 128:
+        return jnp.int8
+    if maxabs < 32768:
+        return jnp.int16
+    return base

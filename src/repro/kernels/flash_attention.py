@@ -1,0 +1,108 @@
+"""Blocked causal flash attention (Pallas, TPU target) — beyond-paper kernel.
+
+The paper's own hot spots are storage scans; this kernel covers the dominant
+compute hot spot of the *framework* serving path (prefill attention), where
+materializing (Sq, Sk) logits for 32k contexts is HBM-infeasible.
+
+Design for v5e: grid (B, H, Sq/BQ); each grid step holds one q tile
+(BQ, D) and streams kv tiles (BK, D) from a VMEM-resident (Sk, D) block with
+an online-softmax carry (m, l, acc) in f32. GQA is folded into the k/v
+BlockSpec index_map (q head h reads kv head h // group). MXU alignment:
+BQ = BK = 128, D = head_dim (128 for every assigned arch except qwen2-0.5b's
+64). VMEM bound: k+v blocks are Sk*D*2*2 bytes -> Sk <= ~48k at D=128 bf16,
+which covers the prefill_32k shape; longer contexts use the sequence-sharded
+path (see sharding/rules.py) so per-device Sk stays within this bound.
+The causal inner loop has a dynamic trip count (no wasted tiles past the
+diagonal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._compat import cdiv, interpret_default
+
+BQ = 128
+BK = 128
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sk: int, sq: int, scale: float,
+                  bq: int, bk: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
+    d = q.shape[-1]
+    offset = sk - sq  # queries are the last sq positions of the key axis
+    qpos = offset + qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(kv, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(kv * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(kv * bk, bk), :].astype(jnp.float32)
+        kpos = kv * bk + jax.lax.iota(jnp.int32, bk)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < sk)
+        logits = jnp.where(mask, logits, NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new[:, None]), 0.0)
+        l = l * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        return m_new, l, acc
+
+    # dynamic causal trip count: kv tiles strictly past the diagonal are skipped
+    hi = jnp.minimum((offset + (qi + 1) * bq + bk - 1) // bk, cdiv(sk, bk))
+    m0 = jnp.full((bq,), NEG, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool | None = None,
+                    bq: int = BQ, bk: int = BK):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D), H % K == 0 -> (B, Sq, H, D).
+
+    Causal with the queries aligned to the END of the key axis (prefill and
+    chunked-prefill both satisfy this).
+    """
+    assert causal, "only the causal serving path is kernelized"
+    if interpret is None:
+        if interpret_default():
+            from . import ref
+            return ref.ref_attention(q, k, v, causal=True)
+        interpret = False
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    group = h // kh
+    scale = d ** -0.5
+
+    qt = jnp.swapaxes(q, 1, 2)  # (B, H, Sq, D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    sq_pad = cdiv(sq, bq) * bq
+    sk_pad = cdiv(sk, bk) * bk
+    if sq_pad != sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    if sk_pad != sk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sk=sk, sq=sq, scale=scale, bq=bq, bk=bk),
+        grid=(b, h, sq_pad // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, q_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, sk_pad, d), lambda b_, h_, q_, g=group: (b_, h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, sk_pad, d), lambda b_, h_, q_, g=group: (b_, h_ // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, q_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_pad, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out[:, :, :sq], 1, 2)

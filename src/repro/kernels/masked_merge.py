@@ -1,0 +1,73 @@
+"""Pallas fused masked-merge kernel (increment application, paper §III.A/F).
+
+Merging an incremental result back into the head table is a fused
+(row-mask AND field-mask) select plus EXISTS/timestamp stamping. Doing this
+as one streaming kernel avoids three separate O(N*W) passes (select, exists
+update, ts update) over HBM. Row alignment (scatter of the compacted
+increment onto the row space) is done once in XLA outside the kernel; the
+kernel owns the wide data movement.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from ._compat import cdiv, interpret_default
+
+TILE_N = 512
+
+
+def _masked_merge_kernel(base_ref, upd_ref, rmask_ref, fmask_ref, tsb_ref, tsn_ref,
+                         out_ref, tso_ref):
+    rm = rmask_ref[:] != 0
+    fm = fmask_ref[:] != 0
+    sel = rm[:, None] & fm[None, :]
+    out_ref[:, :] = jnp.where(sel, upd_ref[:, :], base_ref[:, :])
+    tso_ref[:] = jnp.where(rm, tsn_ref[0], tsb_ref[:])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_merge(base, upd, row_mask, field_mask, ts_base, ts_new,
+                 *, interpret: bool | None = None):
+    """base/upd: (N, W) same dtype; row_mask: (N,) bool; field_mask: (W,) bool;
+    ts_base: (N,) int64; ts_new: scalar -> (merged (N, W), ts_out (N,))."""
+    if interpret is None:
+        if interpret_default():
+            return ref.ref_masked_merge(base, upd, row_mask, field_mask,
+                                        ts_base, ts_new)
+        interpret = False
+    n, w = base.shape
+    n_pad = cdiv(max(n, 1), TILE_N) * TILE_N
+    pad = n_pad - n
+
+    def pad0(x):
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+
+    tsn = jnp.asarray(ts_new, dtype=ts_base.dtype)[None]
+    merged, ts_out = pl.pallas_call(
+        _masked_merge_kernel,
+        grid=(n_pad // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, w), base.dtype),
+            jax.ShapeDtypeStruct((n_pad,), ts_base.dtype),
+        ],
+        interpret=interpret,
+    )(pad0(base), pad0(upd), pad0(row_mask.astype(jnp.int32)),
+      field_mask.astype(jnp.int32), pad0(ts_base), tsn)
+    return merged[:n], ts_out[:n]

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers over the Pallas kernels (+ dtype plumbing).
+
+The store layer talks to kernels only through this module, so the
+kernel/XLA-fallback decision is centralized here.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .delta_codec import delta_pack, delta_unpack, narrow_dtype
+from .fingerprint import fingerprint
+from .flash_attention import flash_attention
+from .masked_merge import masked_merge
+from .version_select import masked_cumsum, version_select
+
+__all__ = [
+    "fingerprint", "fingerprint_rows", "masked_cumsum", "version_select",
+    "delta_pack", "delta_unpack", "narrow_dtype", "masked_merge",
+    "flash_attention", "to_int_lanes", "ref",
+]
+
+
+def to_int_lanes(x) -> jax.Array:
+    """View any fixed-width row array (N, W) as int32 lanes (N, W') for
+    fingerprinting. Sub-4-byte dtypes are zero-extended per element (cheap,
+    keeps lane semantics stable under schema evolution)."""
+    x = jnp.asarray(x)
+    if x.ndim == 1:
+        x = x[:, None]
+    if x.dtype == jnp.int32:
+        return x
+    if x.dtype.itemsize == 4:
+        return x.view(jnp.int32)
+    if x.dtype == jnp.int64:
+        lo = (x & 0xFFFFFFFF).astype(jnp.uint32).view(jnp.int32)
+        hi = (x >> 32).astype(jnp.int32)
+        return jnp.concatenate([lo, hi], axis=1)
+    if x.dtype.itemsize == 2:
+        return x.view(jnp.int16).astype(jnp.int32)
+    if x.dtype.itemsize == 1:
+        return x.view(jnp.int8).astype(jnp.int32)
+    raise TypeError(f"unsupported lane dtype {x.dtype}")
+
+
+def fingerprint_rows(x) -> np.ndarray:
+    """Fingerprint arbitrary-dtype rows; returns host (N, 2) int32."""
+    lanes = to_int_lanes(x)
+    return np.asarray(fingerprint(lanes))

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the semantic ground truth; the Pallas kernels are
+validated against these in interpret mode over shape/dtype sweeps
+(tests/test_kernels_*.py). The refs are also the CPU fallback path used by
+``ops.py`` when a kernel is not profitable at the given size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# fingerprint: 2x32-bit multiplicative (FNV-style) row hashing.
+# ---------------------------------------------------------------------------
+
+import numpy as np
+
+FNV1_INIT = np.int32(-2128831035)  # 0x811C9DC5 as int32
+FNV1_MUL = np.int32(16777619)
+FNV2_INIT = np.int32(-1442509163)  # arbitrary odd second basis
+FNV2_MUL = np.int32(374761393)  # prime (from xxHash)
+
+
+def ref_fingerprint(lanes: jax.Array) -> jax.Array:
+    """lanes: (N, W) int32 row lanes -> (N, 2) int32 fingerprints."""
+    assert lanes.ndim == 2 and lanes.dtype == jnp.int32
+    n, w = lanes.shape
+    h1 = jnp.full((n,), FNV1_INIT, dtype=jnp.int32)
+    h2 = jnp.full((n,), FNV2_INIT, dtype=jnp.int32)
+    for j in range(w):
+        x = lanes[:, j]
+        h1 = (h1 ^ x) * FNV1_MUL
+        h2 = (h2 * FNV2_MUL) ^ (x + np.int32(j + 1))
+    # final avalanche-ish mix
+    h1 = h1 ^ (h2 << 13)
+    h2 = h2 ^ (h1 >> 7)
+    return jnp.stack([h1, h2], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# masked_cumsum: tiled cumulative count of (ts <= T); the scan primitive
+# behind get_version / get_increment (segmented last-cell-<=T selection).
+# ---------------------------------------------------------------------------
+
+
+def ref_masked_cumsum(ts: jax.Array, t_query) -> jax.Array:
+    """ts: (C,) int64/int32 -> (C,) int32 inclusive cumsum of (ts <= T)."""
+    m = (ts <= jnp.asarray(t_query, dtype=ts.dtype)).astype(jnp.int32)
+    return jnp.cumsum(m, dtype=jnp.int32)
+
+
+def ref_version_select(log_vals, log_ts, row_ptr, t_query):
+    """Segmented last-cell-with-ts<=T selection over a CSR cell log.
+
+    log_vals: (C, W); log_ts: (C,) ascending within each row segment;
+    row_ptr: (N+1,) CSR offsets. Returns (out_vals (N, W), found (N,) bool).
+    """
+    if log_ts.shape[0] == 0:
+        n = row_ptr.shape[0] - 1
+        return (jnp.zeros((n,) + log_vals.shape[1:], log_vals.dtype),
+                jnp.zeros((n,), bool))
+    cum = ref_masked_cumsum(log_ts, t_query)
+    cum0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), cum])
+    lo = row_ptr[:-1]
+    hi = row_ptr[1:]
+    cnt = cum0[hi] - cum0[lo]
+    found = cnt > 0
+    idx = jnp.clip(lo + cnt - 1, 0, max(log_ts.shape[0] - 1, 0))
+    out = log_vals[idx]
+    out = jnp.where(found[:, None], out, jnp.zeros_like(out))
+    return out, found
+
+
+# ---------------------------------------------------------------------------
+# delta codec: elementwise version-chain delta packing (sub for ints,
+# XOR-of-bits for floats so unchanged mantissa bytes zero out).
+# ---------------------------------------------------------------------------
+
+
+def ref_delta_pack(new: jax.Array, old: jax.Array) -> jax.Array:
+    if jnp.issubdtype(new.dtype, jnp.floating):
+        ib = jnp.int32 if new.dtype.itemsize == 4 else jnp.int16
+        return (new.view(ib) ^ old.view(ib)).view(new.dtype)
+    return new - old
+
+
+def ref_delta_unpack(delta: jax.Array, old: jax.Array) -> jax.Array:
+    if jnp.issubdtype(delta.dtype, jnp.floating):
+        ib = jnp.int32 if delta.dtype.itemsize == 4 else jnp.int16
+        return (delta.view(ib) ^ old.view(ib)).view(delta.dtype)
+    return delta + old
+
+
+# ---------------------------------------------------------------------------
+# masked_merge: fused (row-mask & field-mask) select + EXISTS/ts stamping.
+# ---------------------------------------------------------------------------
+
+
+def ref_masked_merge(base, upd, row_mask, field_mask, ts_base, ts_new):
+    """base/upd: (N, W); row_mask: (N,) bool; field_mask: (W,) bool;
+    ts_base: (N,) int64; ts_new: scalar. Returns (merged, ts_out)."""
+    sel = row_mask[:, None] & field_mask[None, :]
+    merged = jnp.where(sel, upd, base)
+    ts_out = jnp.where(row_mask, jnp.asarray(ts_new, ts_base.dtype), ts_base)
+    return merged, ts_out
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, GQA): oracle is plain softmax attention.
+# ---------------------------------------------------------------------------
+
+
+def ref_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) with H % K == 0. f32 math."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    qf = q.astype(jnp.float32) * (scale if scale is not None else d ** -0.5)
+    qf = qf.reshape(b, sq, kh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if causal:
+        # queries are the LAST sq positions of the sk-long key sequence
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,238 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (a) the sharding rules produce a coherent SPMD
+program on the production meshes (16x16 single-pod, 2x16x16 multi-pod),
+(b) memory_analysis() fits, (c) cost_analysis() + HLO collective parsing
+yield the roofline terms of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+  python -m repro.launch.dryrun --all --mesh pod # multi-pod pass
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init;
+#   only the module docstring is allowed above these two lines — hence no
+#   `from __future__ import annotations` in this module).
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (ARCH_IDS, RunConfig, SHAPES, get_config,
+                                shapes_for)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import default_hyper, make_prefill_step, \
+    make_serve_step, make_train_step
+from repro.models import abstract_decode_state, batch_specs, build
+from repro.models.layers import ParamSpec
+from repro.sharding import (abstract_tree, shard_batch_specs,
+                            shard_decode_state, tree_shardings)
+from repro.train.optimizer import state_specs
+
+RESULTS_DIR = "experiments/dryrun"
+
+
+def abstract_train_state(cfg, run: RunConfig, mesh):
+    bundle = build(cfg)
+    hyper = default_hyper(cfg, run)
+    pspec = bundle.spec
+    opt_spec = state_specs(pspec, hyper)
+    return {
+        "params": abstract_tree(pspec, mesh),
+        "opt": abstract_tree(opt_spec, mesh),
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               run: RunConfig | None = None, cfg_override=None):
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    run = run or RunConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    with mesh:
+        if shape.mode == "train":
+            step = make_train_step(cfg, run)
+            state = abstract_train_state(cfg, run, mesh)
+            batch = shard_batch_specs(batch_specs(cfg, shape), mesh)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg, run)
+            params = abstract_tree(build(cfg).spec, mesh,
+                                   dtype_override="bfloat16")
+            batch = shard_batch_specs(batch_specs(cfg, shape), mesh)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            step = make_serve_step(cfg, run)
+            params = abstract_tree(build(cfg).spec, mesh,
+                                   dtype_override="bfloat16")
+            inputs = shard_batch_specs(batch_specs(cfg, shape), mesh)
+            state = shard_decode_state(
+                cfg, abstract_decode_state(cfg, shape), mesh)
+            args = (params, inputs["token"], state)
+            if cfg.mrope_sections is not None:
+                args = args + (inputs["positions"],)
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(*args)
+    return lowered, cfg, shape, mesh
+
+
+def _measure(arch, shape_name, multi_pod, cfg_override=None):
+    run = RunConfig(unroll=True)
+    lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod,
+                                           run=run, cfg_override=cfg_override)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = rl.collective_bytes(compiled.as_text())
+    return compiled, cfg, shape, mesh, {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    """Compile the full-depth cell (pass/fail + memory), then compile 1-group
+    and 2-group reduced-depth variants to extrapolate per-layer cost:
+    XLA's cost_analysis (and the HLO text) count a while-loop body ONCE, so
+    scan-over-layers costs must be scaled by trip count:
+      X_total = X(1 group) + (X(2 groups) - X(1 group)) * (n_groups - 1).
+    """
+    import dataclasses as dc
+    from repro.models.transformer import pattern
+
+    t0 = time.time()
+    lowered, cfg, shape, mesh = lower_cell(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    del compiled, lowered
+
+    # per-group cost extrapolation
+    p, n_groups = (cfg.n_layers, 1) if cfg.family == "encdec" else pattern(cfg)
+    if cfg.family == "encdec":
+        p, n_groups = 1, cfg.n_layers
+        mk = lambda k: dc.replace(cfg, n_layers=k, encoder_layers=k)
+    else:
+        mk = lambda k: dc.replace(cfg, n_layers=k * p)
+    _, _, _, _, c1 = _measure(arch, shape_name, multi_pod, cfg_override=mk(1))
+    _, _, _, _, c2 = _measure(arch, shape_name, multi_pod, cfg_override=mk(2))
+
+    def extrap(key):
+        if isinstance(c1[key], dict):
+            out = {}
+            for k in c1[key]:
+                out[k] = c1[key][k] + (c2[key][k] - c1[key][k]) * (n_groups - 1)
+            return out
+        return c1[key] + (c2[key] - c1[key]) * (n_groups - 1)
+
+    flops = extrap("flops")
+    nbytes = extrap("bytes")
+    coll = extrap("coll")
+    n_dev = mesh.devices.size
+    roof = rl.Roofline(
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective=coll,
+        model_flops_global=rl.model_flops(cfg, shape),
+        n_devices=n_dev)
+    row = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode,
+        "n_groups": n_groups,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": mem_info,
+        "hlo_ops": {"n_collectives": coll["n_ops"]},
+        "roofline": roof.as_dict(),
+        "cost_1group": c1, "cost_2group": c2,
+    }
+    return row
+
+
+def cell_list(multi_pod: bool, archs=None) -> list[tuple[str, str]]:
+    cells = []
+    for arch in (archs or ARCH_IDS):
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "pod", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = {"single": [False], "pod": [True], "both": [False, True]}[args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape
+        ok = True
+        for mp in meshes:
+            tag = f"{args.arch}_{args.shape}_{'pod' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {tag}")
+                continue
+            try:
+                row = run_cell(args.arch, args.shape, mp)
+                with open(path, "w") as f:
+                    json.dump(row, f, indent=1)
+                r = row["roofline"]
+                print(f"[ok] {tag}: compile={row['t_compile_s']}s "
+                      f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+            except Exception:
+                ok = False
+                with open(os.path.join(args.out, tag + ".FAIL"), "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag}", file=sys.stderr)
+                traceback.print_exc()
+        return 0 if ok else 1
+
+    # orchestrate: one subprocess per cell (isolates XLA state + memory)
+    failures = []
+    for mp in meshes:
+        for arch, shape in cell_list(mp):
+            tag = f"{arch}_{shape}_{'pod' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {tag}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape,
+                   "--mesh", "pod" if mp else "single", "--out", args.out]
+            print(f"[run] {tag}", flush=True)
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                failures.append(tag)
+    print(f"done; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

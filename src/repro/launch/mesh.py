@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is pure
+data parallelism whose gradient all-reduce is the only cross-pod collective
+(ICI within a pod, DCN across pods).
+
+Defined as functions, not module constants: importing this module never
+touches jax device state (device count is locked at first jax init, and the
+smoke tests must see 1 CPU device while the dry-run sees 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int | None = None):
+    """Small mesh for CPU distributed tests (8 host devices -> (2, 4))."""
+    n = devices or len(jax.devices())
+    if n >= 8:
+        return jax.make_mesh((n // 4, 4), ("data", "model"))
+    if n >= 2:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,101 @@
+"""train_step / prefill_step / serve_step builders shared by the trainer,
+the serving engine, and the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import build
+from repro.models.transformer import FwdOpts
+from repro.train.optimizer import OptHyper, apply_updates, clip_by_global_norm
+
+
+def fwd_opts(run: RunConfig) -> FwdOpts:
+    return FwdOpts(attn_impl=run.attn_impl, attn_chunk=run.attn_chunk,
+                   remat=run.remat, unroll=run.unroll)
+
+
+def default_hyper(cfg: ModelConfig, run: RunConfig) -> OptHyper:
+    name = run.optimizer
+    if cfg.param_count() > 2e11 and name == "adamw":
+        # AdamW m+v for >200B params exceeds v5e HBM budgets; see DESIGN.md
+        name = "adafactor"
+    return OptHyper(name=name, lr=run.learning_rate,
+                    weight_decay=run.weight_decay)
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    hyper: OptHyper | None = None):
+    bundle = build(cfg)
+    hyper = hyper or default_hyper(cfg, run)
+    opts = fwd_opts(run)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            return bundle.loss(p, batch, opts)
+
+        if run.microbatch and run.microbatch > 1:
+            # gradient accumulation: scan over microbatches, mean grads
+            mb = run.microbatch
+
+            def split(key_x):
+                name, x = key_x
+                bdim = 1 if name == "positions" else 0  # positions: (3,B,S)
+                assert x.shape[bdim] % mb == 0, (name, x.shape, mb)
+                x = jnp.moveaxis(x, bdim, 0)
+                x = x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+                return jnp.moveaxis(x, 1, bdim + 1)
+            mbatches = {k: split((k, v)) for k, v in dict(batch).items()}
+
+            def acc_body(carry, mbatch):
+                g_acc, loss_acc = carry
+
+                def lf_mb(p):
+                    return bundle.loss(p, mbatch, opts)
+                (loss, _m), g = jax.value_and_grad(lf_mb, has_aux=True)(params)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (zeros, 0.0), mbatches)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = {"ce": loss, "z_loss": jnp.zeros(()),
+                       "moe_aux": jnp.zeros(()), "tokens": jnp.zeros(())}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        new_params, new_opt = apply_updates(hyper, params, grads, state["opt"])
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig):
+    bundle = build(cfg)
+    opts = fwd_opts(run)
+
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch, opts)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig | None = None):
+    bundle = build(cfg)
+    opts = fwd_opts(run) if run is not None else None
+
+    def serve_step(params, token, state, positions=None):
+        if cfg.family == "encdec":
+            return bundle.decode(params, token, state)
+        from repro.models import transformer as tf
+        return tf.decode_step(params, cfg, token, state, positions, opts)
+
+    return serve_step

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures as composable pure-JAX modules."""
+from .model import ModelBundle, abstract_decode_state, batch_specs, build
+from .transformer import FwdOpts
+
+__all__ = ["ModelBundle", "abstract_decode_state", "batch_specs", "build",
+           "FwdOpts"]

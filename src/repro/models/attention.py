@@ -1,0 +1,234 @@
+"""GQA attention: specs + train/prefill/decode paths.
+
+Two softmax-attention implementations, selected by RunConfig.attn_impl:
+
+* ``xla``: full (Sq, Sk) logits einsum — best for short train sequences where
+  XLA fuses mask+softmax; memory O(S^2).
+* ``chunked``: the flash-attention algorithm expressed in XLA (lax.scan over
+  KV chunks with an online-softmax carry) — memory O(S * chunk); the
+  compile-anywhere twin of kernels/flash_attention.py (which is the Pallas
+  TPU version of the same loop, used on real TPU serving). Wrapped in
+  jax.checkpoint so the backward pass recomputes chunks instead of saving
+  scan carries.
+
+Decode writes new KV into a ring slot (pos % S_max) and attends over the
+full cache with a validity mask; the cache seq axis may be sharded over the
+``model`` mesh axis (sequence-sharded decode) — the softmax reductions over
+the sharded axis become mesh all-reduces under GSPMD.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, apply_rope
+
+NEG = -1e30
+
+
+def attn_spec(cfg, *, cross: bool = False) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((k, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((k, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, K, hd)
+    v: jax.Array
+
+
+def _qkv(p: dict, x: jax.Array, cfg, xkv: jax.Array | None = None):
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", xkv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", xkv, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _xla_attention(q, k, v, *, causal: bool, q_offset, kv_valid=None):
+    """Full-logits attention. q: (B,Sq,H,D), k/v: (B,Sk,K,D)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, sq, kh, g, d) * (d ** -0.5)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    kpos = jnp.arange(k.shape[1])
+    mask = None
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_valid is not None:
+        vmask = kv_valid[None, :] if kv_valid.ndim == 1 else kv_valid
+        mask = vmask if mask is None else (mask & vmask)
+    if mask is not None:
+        while mask.ndim < 5:
+            mask = mask[None]
+        logits = jnp.where(mask, logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.checkpoint, static_argnums=(3, 5, 6, 7))
+def _chunked_attention(q, k, v, causal: bool, q_offset, chunk: int,
+                       unroll: bool = False, compact_logits: bool = False):
+    """Flash algorithm in XLA: scan over KV chunks, online softmax carry.
+
+    compact_logits=True (no-grad serving prefill): the (Sq, chunk) logit and
+    probability intermediates stay bf16 while the online-softmax statistics
+    (m, l, acc) stay f32 — halves the dominant HBM term of 32k prefill
+    (§Perf iter 5). On real TPU the Pallas kernel (kernels/flash_attention)
+    keeps them in VMEM entirely; this is the XLA-visible approximation.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ldt = jnp.bfloat16 if compact_logits else jnp.float32
+    qf = q.astype(ldt).reshape(b, sq, kh, g, d) * jnp.asarray(d ** -0.5, ldt)
+    qpos = jnp.arange(sq) + q_offset
+    ks = k.reshape(b, n_chunks, chunk, kh, d).swapaxes(0, 1)
+    vs = v.reshape(b, n_chunks, chunk, kh, d).swapaxes(0, 1)
+
+    def body(carry, ckv):
+        m, l, acc = carry
+        kc, vc, ci = ckv
+        kpos = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqkgd,bckd->bkgqc", qf, kc.astype(ldt),
+                            preferred_element_type=ldt)
+        mask = kpos[None, :] < sk
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        logits = jnp.where(mask[None, None, None], logits,
+                           jnp.asarray(NEG, ldt))
+        m_new = jnp.maximum(m, logits.max(-1).astype(jnp.float32))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None].astype(ldt))
+        p = jnp.where(mask[None, None, None], p, jnp.asarray(0.0, ldt))
+        l = l * alpha + p.sum(-1, dtype=jnp.float32)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vc.astype(ldt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(n_chunks)),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def run_attention(q, k, v, *, causal: bool, q_offset=0, impl: str = "xla",
+                  chunk: int = 1024, kv_valid=None, unroll: bool = False,
+                  compact_logits: bool = False):
+    if impl == "chunked" and kv_valid is None:
+        return _chunked_attention(q, k, v, causal, q_offset, chunk, unroll,
+                                  compact_logits)
+    return _xla_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          kv_valid=kv_valid)
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+
+def _wants_seq_parallel(cfg) -> bool:
+    """True when the head count cannot shard the model axis (qwen2-0.5b's 14
+    heads, qwen1.5-4b's 20): attention weights replicate, so without further
+    action every model peer computes the FULL attention (16x redundant
+    FLOPs, the useful=0.10 pathology in EXPERIMENTS.md SPerf iter 7). The
+    fix: shard the QUERY sequence over `model` inside the attention block —
+    each peer handles S/16 query rows; k/v (small for GQA) are gathered."""
+    from repro.sharding.rules import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        return False
+    return cfg.n_heads % mesh.shape["model"] != 0
+
+
+def attention_train(p, x, cfg, *, positions, impl="xla", chunk=1024,
+                    causal=True, use_rope=True, xkv=None, unroll=False):
+    seq_par = _wants_seq_parallel(cfg)
+    if seq_par:
+        from repro.sharding.rules import constrain
+        x = constrain(x, ("batch", "seq_sp", None))
+    q, k, v = _qkv(p, x, cfg, xkv=xkv)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    if seq_par:
+        from repro.sharding.rules import constrain
+        q = constrain(q, ("batch", "seq_sp", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    out = run_attention(q, k, v, causal=causal, impl=impl, chunk=chunk,
+                        unroll=unroll)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    if seq_par:
+        from repro.sharding.rules import constrain
+        out = constrain(out, ("batch", None, None))
+    return out
+
+
+def attention_prefill(p, x, cfg, *, positions, impl="chunked", chunk=1024,
+                      use_rope=True, unroll=False):
+    """Returns (out, KVCache over the S prefill positions)."""
+    q, k, v = _qkv(p, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    out = run_attention(q, k, v, causal=True, impl=impl, chunk=chunk,
+                        unroll=unroll, compact_logits=True)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return out, KVCache(k=k, v=v)
+
+
+def attention_decode(p, x, cfg, cache: KVCache, *, pos, cache_len,
+                     positions=None, use_rope=True):
+    """One-token decode. x: (B, 1, d); cache: (B, S_max, K, hd) ring.
+
+    pos: scalar int32 position of the new token (ring slot = pos % S_max);
+    cache_len: scalar count of valid cached positions (== S_max when full).
+    """
+    b, _, _ = x.shape
+    s_max = cache.k.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    if use_rope:
+        rp = positions if positions is not None else \
+            jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        q = apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, rp, cfg.rope_theta, cfg.mrope_sections)
+    slot = jnp.asarray(pos % s_max, jnp.int32)
+    nk = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, 1)
+    nv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, 1)
+    n_valid = jnp.minimum(cache_len + 1, s_max)
+    kv_valid = jnp.arange(s_max) < n_valid
+    out = run_attention(q, nk.astype(x.dtype), nv.astype(x.dtype),
+                        causal=False, kv_valid=kv_valid)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return out, KVCache(k=nk, v=nv)

@@ -1,0 +1,174 @@
+"""Param-spec machinery + shared layers (norms, RoPE/M-RoPE, MLP).
+
+No flax: parameters are plain pytrees of arrays. Every leaf is declared by a
+ParamSpec carrying its logical sharding axes, so the same spec tree drives
+(a) real initialization for smoke tests/examples and (b) abstract
+ShapeDtypeStruct+NamedSharding construction for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]      # logical axis names per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"              # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_param(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    if spec.init == "embed":
+        std = spec.scale * 0.02
+    if spec.init == "small":
+        std = spec.scale * 0.01
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def _path_key(root: jax.Array, path) -> jax.Array:
+    k = root
+    for p in path:
+        name = getattr(p, "key", getattr(p, "idx", p))
+        k = jax.random.fold_in(k, hash(str(name)) % (2**31 - 1))
+    return k
+
+
+def init_params(specs, key: jax.Array):
+    """Deterministic per-path initialization of a ParamSpec tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s: init_param(s, _path_key(key, path)), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (scan-over-layers parameter layout)."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.dtype,
+                            s.init, s.scale),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(cfg) -> dict:
+    if cfg.norm == "layernorm_np":     # OLMo: non-parametric LN
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+                "bias": ParamSpec((cfg.d_model,), ("embed",), init="zeros")}
+    return {"scale": ParamSpec((cfg.d_model,), ("embed",), init="ones")}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: tuple[int, ...] | None = None) -> jax.Array:
+    """x: (B, S, H, D). positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the D/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+    """
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))            # (D/2,)
+    if sections is None:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) position ids"
+        parts = []
+        off = 0
+        for i, sec in enumerate(sections):
+            f = freqs[off:off + sec]
+            parts.append(positions[i][..., None].astype(jnp.float32) * f)
+            off += sec
+        assert off == freqs.shape[0], "mrope sections must cover head_dim/2"
+        angles = jnp.concatenate(parts, axis=-1)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU or plain)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    s = {"wi": ParamSpec((cfg.d_model, d_ff), ("embed", "mlp")),
+         "wo": ParamSpec((d_ff, cfg.d_model), ("mlp", "embed"))}
+    if cfg.mlp_gated:
+        s["wg"] = ParamSpec((cfg.d_model, d_ff), ("embed", "mlp"))
+    return s
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.mlp_gated:
+        h = act(x @ p["wg"].astype(x.dtype)) * h
+    else:
+        h = act(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg) -> dict:
+    # embed_tbl (not "embed"): the table's d_model dim must NOT be FSDP-
+    # sharded — contracting a data-sharded dim against data-sharded batch
+    # activations makes GSPMD emit full (B, S, V) logits all-reduces.
+    # vocab@model gives clean vocab-sharded logits instead.
+    s = {"tok": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_tbl"),
+                          init="embed")}
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed_tbl", "vocab"))
+    return s
+
+
+def apply_embed(p: dict, tokens: jax.Array, cfg) -> jax.Array:
+    return p["tok"].astype(jnp.dtype(cfg.dtype))[tokens]
+
+
+def apply_head(p: dict, x: jax.Array, cfg) -> jax.Array:
+    w = p["head"] if "head" in p else p["tok"].T
+    return x @ w.astype(x.dtype)

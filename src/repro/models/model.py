@@ -1,0 +1,130 @@
+"""Unified model API: build any assigned architecture from its ModelConfig.
+
+    bundle = build(cfg)
+    params = bundle.init(key)
+    loss, metrics = bundle.loss(params, batch, opts)
+    logits, state = bundle.prefill(params, batch, opts)
+    logits, state = bundle.decode(params, token, state)
+
+`batch_specs(cfg, shape)` yields the ShapeDtypeStructs for every model input
+of an assigned (arch x shape) cell — the dry-run and the serving engine both
+build their abstract inputs from it (modality frontends are stubs: VLM/audio
+cells feed precomputed patch/frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import transformer as tf
+from . import whisper as wh
+from .layers import init_params
+from .transformer import FwdOpts
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    spec: Any
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+
+    def init(self, key) -> Any:
+        return init_params(self.spec, key)
+
+    def abstract_params(self):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), self.spec,
+            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family == "encdec":
+        return ModelBundle(
+            cfg=cfg, spec=wh.whisper_spec(cfg),
+            loss=lambda p, b, opts=None: wh.whisper_loss_fn(p, cfg, b, opts),
+            prefill=lambda p, b, opts=None, pad_to=None: wh.whisper_prefill(
+                p, cfg, b, opts, pad_to=pad_to),
+            decode=lambda p, t, s: wh.whisper_decode_step(p, cfg, t, s))
+    return ModelBundle(
+        cfg=cfg, spec=tf.model_spec(cfg),
+        loss=lambda p, b, opts=None: tf.loss_fn(p, cfg, b, opts or FwdOpts()),
+        prefill=lambda p, b, opts=None, pad_to=None: tf.prefill(
+            p, cfg, b, opts or FwdOpts(attn_impl="chunked"), pad_to=pad_to),
+        decode=lambda p, t, s, positions=None: tf.decode_step(p, cfg, t, s,
+                                                              positions))
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape) cell
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.mode == "train":
+        out: dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            return out
+        if cfg.input_mode == "embeddings":
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.mrope_sections is not None:
+            out["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return out
+    if shape.mode == "prefill":
+        out = {}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            return out
+        if cfg.input_mode == "embeddings":
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.mrope_sections is not None:
+            out["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return out
+    # decode: one new token against an s-long cache/state
+    out = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.input_mode == "embeddings":
+        out = {"token": jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)}
+    if cfg.mrope_sections is not None:
+        out["positions"] = jax.ShapeDtypeStruct((3, b, 1), i32)
+    return out
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the decode-mode cache/state inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    as_sds = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    if cfg.family == "encdec":
+        kshape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd)
+        cshape = (cfg.n_layers, b, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd)
+        from .attention import KVCache
+        return wh.WhisperState(
+            self_caches=KVCache(k=jax.ShapeDtypeStruct(kshape, jnp.bfloat16),
+                                v=jax.ShapeDtypeStruct(kshape, jnp.bfloat16)),
+            cross_k=jax.ShapeDtypeStruct(cshape, jnp.bfloat16),
+            cross_v=jax.ShapeDtypeStruct(cshape, jnp.bfloat16),
+            pos=jax.ShapeDtypeStruct((), jnp.int32),
+            cache_len=jax.ShapeDtypeStruct((), jnp.int32))
+    caches = jax.eval_shape(lambda: tf.init_caches(cfg, b, s))
+    return tf.DecodeState(caches=caches,
+                          pos=jax.ShapeDtypeStruct((), jnp.int32),
+                          cache_len=jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") block: data-dependent per-channel decay, attention-free.
+
+Recurrence per head (state S: (Dk, Dv) matrix):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w_raw_t)) data-dependent per (head, Dk) channel.
+
+TPU adaptation mirrors ssm.py: the CUDA WKV kernel's sequential loop becomes
+chunk-wise processing — an exact associative_scan over the affine state maps
+within a CHUNK, chained by a lax.scan carry across chunks (decays are in
+(0,1), so scan products cannot overflow). The head axis carries the
+``heads`` logical axis so chunk intermediates (B, c, H, Dk, Dv) shard over
+the model mesh axis. Sequential oracle kept for tests + decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, apply_norm
+
+CHUNK = 32
+LORA = 32
+LORA_W = 64
+
+
+def rwkv_time_spec(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dk = d // h
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu": ParamSpec((5, d), (None, "embed"), init="zeros"),       # w,k,v,r,g
+        "lora1": ParamSpec((d, 5 * LORA), ("embed", None), init="small"),
+        "lora2": ParamSpec((5, LORA, d), (None, None, "embed"), init="small"),
+        "w0": ParamSpec((d,), ("embed",), init="zeros"),
+        "wlora1": ParamSpec((d, LORA_W), ("embed", None), init="small"),
+        "wlora2": ParamSpec((LORA_W, d), (None, "embed"), init="small"),
+        "bonus": ParamSpec((h, dk), ("heads", "head_dim"), init="zeros"),
+        "wr": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wk": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wv": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wg": ParamSpec((d, d), ("embed", "heads_flat")),
+        "wo": ParamSpec((d, d), ("heads_flat", "embed")),
+        "ln_x_scale": ParamSpec((d,), ("embed",), init="ones"),
+        "ln_x_bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def rwkv_channel_spec(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "embed_out")),
+    }
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array         # (B, H, Dk, Dv) wkv matrix state
+    shift_t: jax.Array   # (B, d) prev token input to time-mix
+    shift_c: jax.Array   # (B, d) prev token input to channel-mix
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
+    d, h = cfg.d_model, cfg.n_heads
+    dk = d // h
+    return RWKVState(
+        s=jnp.zeros((batch, h, dk, dk), jnp.float32),
+        shift_t=jnp.zeros((batch, d), dtype),
+        shift_c=jnp.zeros((batch, d), dtype))
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """xx_t = x_{t-1} (zero / carried state at t=0). x: (B, L, d)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """RWKV6 data-dependent lerp -> (x_w, x_k, x_v, x_r, x_g)."""
+    dx = xx - x
+    z = x + dx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(z @ p["lora1"].astype(x.dtype))           # (B,L,5*LORA)
+    lo = lo.reshape(*lo.shape[:-1], 5, LORA)
+    mix = jnp.einsum("blsr,srd->bsld", lo, p["lora2"].astype(x.dtype))
+    # mix: (B,5,L,d); branch b: x + dx*(mu[b] + mix[:,b])
+    outs = []
+    for b in range(5):
+        outs.append(x + dx * (p["mu"][b].astype(x.dtype) + mix[:, b]))
+    return outs
+
+
+def _decay(p, x_w):
+    """w_t in (0,1): exp(-exp(w0 + lora(x_w))). Returns log w (<= 0), f32."""
+    raw = p["w0"].astype(jnp.float32) + \
+        (jnp.tanh(x_w @ p["wlora1"].astype(x_w.dtype)).astype(jnp.float32)
+         @ p["wlora2"].astype(jnp.float32))
+    return -jnp.exp(jnp.clip(raw, -8.0, 4.0))
+
+
+def wkv_sequential(r, k, v, logw, u, s0):
+    """Oracle. r/k/v: (B,L,H,Dk); logw: (B,L,H,Dk); u: (H,Dk); s0: (B,H,Dk,Dv)."""
+    def step(s, args):
+        rt, kt, vt, lwt = args  # (B,H,Dk)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,Dk,Dv)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, out
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, logw))
+    s, outs = jax.lax.scan(step, s0, xs)
+    return outs.swapaxes(0, 1), s
+
+
+def wkv_chunked(r, k, v, logw, u, s0, *, chunk: int = CHUNK,
+                unroll: bool = False):
+    """Exact chunked WKV via associative_scan (see module docstring)."""
+    b, l, h, dk = r.shape
+    if unroll:
+        chunk = max(chunk, -(-l // 4))  # see ssm.py: bounded unroll count
+    chunk = min(chunk, l)
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2[..., None] * b1 + b2
+
+    def per_chunk(s, args):
+        rc, kc, vc, lwc = args                            # (B,c,H,Dk)
+        kv = kc[..., :, None] * vc[..., None, :]          # (B,c,H,Dk,Dv)
+        w = jnp.exp(lwc)                                  # decay applied BEFORE add
+        # state after t: S_t = diag(w_t) S_{t-1} + kv_t
+        aa, bb = jax.lax.associative_scan(combine, (w, kv), axis=1)
+        s_t = aa[..., None] * s[:, None] + bb             # (B,c,H,Dk,Dv)
+        s_prev = jnp.concatenate([s[:, None], s_t[:, :-1]], axis=1)
+        out = jnp.einsum("bchk,bchkv->bchv", rc,
+                         s_prev + u[..., None] * kv)
+        return s_t[:, -1], out
+
+    xs = tuple(a.reshape(b, nc, chunk, h, dk).swapaxes(0, 1)
+               for a in (r, k, v, logw))
+    s, outs = jax.lax.scan(per_chunk, s0, xs, unroll=nc if unroll else 1)
+    out = outs.swapaxes(0, 1).reshape(b, nc * chunk, h, dk)[:, :l]
+    return out, s
+
+
+def rwkv_time_mix(p, x, cfg, *, state: RWKVState | None = None,
+                  chunked: bool = True, unroll: bool = False):
+    """x: (B, L, d) -> (out, (new wkv state, new shift))."""
+    b, l, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    xx = _token_shift(x, None if state is None else state.shift_t)
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xx)
+    logw = _decay(p, x_w).reshape(b, l, h, dk)
+    r = (x_r @ p["wr"].astype(x.dtype)).reshape(b, l, h, dk)
+    k = (x_k @ p["wk"].astype(x.dtype)).reshape(b, l, h, dk)
+    v = (x_v @ p["wv"].astype(x.dtype)).reshape(b, l, h, dk)
+    g = jax.nn.silu(x_g @ p["wg"].astype(x.dtype))
+    s0 = (jnp.zeros((b, h, dk, dk), jnp.float32) if state is None
+          else state.s)
+    u = p["bonus"].astype(jnp.float32)
+    if chunked:
+        out, s = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), logw, u, s0,
+                             unroll=unroll)
+    else:
+        out, s = wkv_sequential(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), logw, u, s0)
+    out = out.reshape(b, l, d)
+    # per-head group norm (ln_x)
+    out = out.reshape(b, l, h, dk)
+    mu = out.mean(-1, keepdims=True)
+    var = ((out - mu) ** 2).mean(-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, l, d)
+    out = out * p["ln_x_scale"].astype(jnp.float32) + p["ln_x_bias"].astype(jnp.float32)
+    out = (out.astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    return out, (s, x[:, -1, :])
+
+
+def rwkv_channel_mix(p, x, cfg, *, state: RWKVState | None = None):
+    xx = _token_shift(x, None if state is None else state.shift_c)
+    xk = x + (xx - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * (k @ p["wv"].astype(x.dtype))
+    return out, x[:, -1, :]

@@ -1,0 +1,371 @@
+"""Decoder-only LM assembly for dense / MoE / hybrid / SSM / VLM families.
+
+Every layer = mixer (attention | mamba | rwkv_time) + ff (mlp | moe |
+rwkv_channel). Layers are grouped into the architecture's repeating pattern
+(dense: period 1; jamba: period 8 = 7 mamba + 1 attn with MoE on alternate
+layers) and the pattern scans over groups with stacked parameters —
+compile time and HLO size are O(pattern), not O(depth).
+
+Three entry points per the assigned shape modes: loss_fn (train),
+prefill (build caches + last-token logits), decode_step (one token).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import (ParamSpec, apply_embed, apply_head, apply_mlp, apply_norm,
+                     embed_spec, init_params, mlp_spec, norm_spec, stack_specs)
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg) -> list[tuple[str, str]]:
+    kinds = []
+    for l in range(cfg.n_layers):
+        if cfg.rwkv:
+            kinds.append(("rwkv", "rwkv_ff"))
+            continue
+        mixer = "attn" if cfg.is_attn_layer(l) else "mamba"
+        ff = "moe" if cfg.is_moe_layer(l) else "mlp"
+        kinds.append((mixer, ff))
+    return kinds
+
+
+def pattern(cfg) -> tuple[int, int]:
+    """(period, n_groups): smallest repeating prefix of layer_kinds."""
+    kinds = layer_kinds(cfg)
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p == 0 and kinds == kinds[:p] * (n // p):
+            return p, n // p
+    return n, 1
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def sublayer_spec(cfg, kind: tuple[str, str]) -> dict:
+    mixer, ff = kind
+    s: dict[str, Any] = {"norm1": norm_spec(cfg), "norm2": norm_spec(cfg)}
+    if mixer == "attn":
+        s["attn"] = attn.attn_spec(cfg)
+    elif mixer == "mamba":
+        s["mamba"] = ssm_mod.ssm_spec(cfg)
+    else:
+        s["rwkv_t"] = rwkv_mod.rwkv_time_spec(cfg)
+    if ff == "mlp":
+        s["mlp"] = mlp_spec(cfg)
+    elif ff == "moe":
+        s["moe"] = moe_mod.moe_spec(cfg)
+    else:
+        s["rwkv_c"] = rwkv_mod.rwkv_channel_spec(cfg)
+    return s
+
+
+def model_spec(cfg) -> dict:
+    p, n_groups = pattern(cfg)
+    kinds = layer_kinds(cfg)[:p]
+    blocks = [stack_specs(sublayer_spec(cfg, k), n_groups) for k in kinds]
+    return {"embed": embed_spec(cfg), "blocks": blocks,
+            "final_norm": norm_spec(cfg)}
+
+
+def init_model(cfg, key) -> dict:
+    return init_params(model_spec(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# caches (decode/prefill state per sublayer, stacked over scan groups)
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: list        # per sublayer-in-pattern: KVCache | SSMState | rwkv tuple
+    pos: jax.Array      # scalar int32: absolute position of next token
+    cache_len: jax.Array  # scalar int32: number of valid cached positions
+
+
+def init_caches(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> list:
+    p, g = pattern(cfg)
+    kinds = layer_kinds(cfg)[:p]
+    caches = []
+    d = cfg.d_model
+    for mixer, _ff in kinds:
+        if mixer == "attn":
+            shape = (g, batch, s_max, cfg.n_kv_heads, cfg.hd)
+            caches.append(attn.KVCache(k=jnp.zeros(shape, dtype),
+                                       v=jnp.zeros(shape, dtype)))
+        elif mixer == "mamba":
+            di = cfg.ssm_expand * d
+            caches.append(ssm_mod.SSMState(
+                h=jnp.zeros((g, batch, di, cfg.ssm_state), jnp.float32),
+                conv=jnp.zeros((g, batch, cfg.ssm_conv - 1, di), dtype)))
+        else:
+            h = cfg.n_heads
+            dk = d // h
+            caches.append(rwkv_mod.RWKVState(
+                s=jnp.zeros((g, batch, h, dk, dk), jnp.float32),
+                shift_t=jnp.zeros((g, batch, d), dtype),
+                shift_c=jnp.zeros((g, batch, d), dtype)))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FwdOpts:
+    attn_impl: str = "xla"
+    attn_chunk: int = 1024
+    remat: str = "nothing_saveable"
+    unroll: bool = False   # unroll the group scan (dry-run cost measurement)
+
+
+def _maybe_scan(body, init, xs, unroll: bool):
+    """lax.scan, or an unrolled python loop (used by the dry-run to recover
+    per-layer costs: XLA cost_analysis counts a while body only once)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _remat_policy(name: str):
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if name == "none":
+        return None
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _apply_sublayer_train(p, x, cfg, kind, positions, opts: FwdOpts):
+    mixer, ff = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        y = attn.attention_train(p["attn"], h, cfg, positions=positions,
+                                 impl=opts.attn_impl, chunk=opts.attn_chunk,
+                                 unroll=opts.unroll)
+    elif mixer == "mamba":
+        y, _ = ssm_mod.mamba_forward(p["mamba"], h, cfg, unroll=opts.unroll)
+    else:
+        y, _ = rwkv_mod.rwkv_time_mix(p["rwkv_t"], h, cfg, unroll=opts.unroll)
+    x = x + y
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if ff == "mlp":
+        y = apply_mlp(p["mlp"], h, cfg)
+    elif ff == "moe":
+        y, aux = moe_mod.apply_moe_sharded(p["moe"], h, cfg)
+    else:
+        y, _ = rwkv_mod.rwkv_channel_mix(p["rwkv_c"], h, cfg)
+    return x + y, aux
+
+
+def forward_train(params, cfg, batch, opts: FwdOpts = FwdOpts()):
+    """batch: tokens (B,S) or embeds (B,S,d); optional positions.
+    Returns hidden states (B, S, d) and accumulated moe aux loss."""
+    if cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = apply_embed(params["embed"], batch["tokens"], cfg)
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    p, n_groups = pattern(cfg)
+    kinds = layer_kinds(cfg)[:p]
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        for i, kind in enumerate(kinds):
+            x, a = _apply_sublayer_train(group_params[i], x, cfg, kind,
+                                         positions, opts)
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_body
+    policy = _remat_policy(opts.remat)
+    if policy is not None:
+        body = jax.checkpoint(group_body, policy=policy)
+    (x, aux), _ = _maybe_scan(body, (x, jnp.zeros((), jnp.float32)),
+                              params["blocks"], opts.unroll)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def loss_fn(params, cfg, batch, opts: FwdOpts = FwdOpts(), z_coef: float = 1e-4,
+            aux_coef: float | None = None):
+    """Causal-LM cross entropy with z-loss; labels = batch['labels'] (B,S),
+    -100 entries masked."""
+    x, aux = forward_train(params, cfg, batch, opts)
+    logits = apply_head(params["embed"], x, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    zl = z_coef * ((lse * mask) ** 2).sum() / denom
+    ac = cfg.router_aux_coef if aux_coef is None else aux_coef
+    loss = ce + zl + ac * aux
+    return loss, {"ce": ce, "z_loss": zl, "moe_aux": aux,
+                  "tokens": mask.sum()}
+
+
+# -- prefill -----------------------------------------------------------------
+
+def prefill(params, cfg, batch, opts: FwdOpts = FwdOpts(attn_impl="chunked"),
+            pad_to: int | None = None):
+    """Full forward over the prompt; returns (last-token logits, DecodeState).
+
+    pad_to: reserve KV-cache capacity for decode (defaults to the prompt
+    length: the decode ring then overwrites the oldest slot, i.e. the
+    decode_32k "cache at capacity" regime)."""
+    if cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = apply_embed(params["embed"], batch["tokens"], cfg)
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    p, n_groups = pattern(cfg)
+    kinds = layer_kinds(cfg)[:p]
+
+    def group_body(x, group_params):
+        caches = []
+        for i, (mixer, ff) in enumerate(kinds):
+            gp = group_params[i]
+            h = apply_norm(gp["norm1"], x, cfg.norm)
+            if mixer == "attn":
+                y, c = attn.attention_prefill(gp["attn"], h, cfg,
+                                              positions=positions,
+                                              impl=opts.attn_impl,
+                                              chunk=opts.attn_chunk,
+                                              unroll=opts.unroll)
+            elif mixer == "mamba":
+                y, c = ssm_mod.mamba_forward(gp["mamba"], h, cfg,
+                                             unroll=opts.unroll)
+            else:
+                y, (s_wkv, shift) = rwkv_mod.rwkv_time_mix(gp["rwkv_t"], h, cfg,
+                                                           unroll=opts.unroll)
+                c = None  # completed below with channel shift
+            x = x + y
+            h = apply_norm(gp["norm2"], x, cfg.norm)
+            if ff == "mlp":
+                y = apply_mlp(gp["mlp"], h, cfg)
+            elif ff == "moe":
+                y, _ = moe_mod.apply_moe_sharded(gp["moe"], h, cfg)
+            else:
+                y, shift_c = rwkv_mod.rwkv_channel_mix(gp["rwkv_c"], h, cfg)
+                c = rwkv_mod.RWKVState(s=s_wkv, shift_t=shift.astype(x.dtype),
+                                       shift_c=shift_c.astype(x.dtype))
+            x = x + y
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, caches = _maybe_scan(group_body, x, params["blocks"], opts.unroll)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_head(params["embed"], x[:, -1:, :], cfg)
+    caches = list(caches)
+    if pad_to is not None and pad_to > s:
+        pad = pad_to - s
+        caches = [attn.KVCache(k=jnp.pad(c.k, ((0, 0), (0, 0), (0, pad),
+                                               (0, 0), (0, 0))),
+                               v=jnp.pad(c.v, ((0, 0), (0, 0), (0, pad),
+                                               (0, 0), (0, 0))))
+                  if isinstance(c, attn.KVCache) else c for c in caches]
+    state = DecodeState(caches=caches,
+                        pos=jnp.asarray(s, jnp.int32),
+                        cache_len=jnp.asarray(s, jnp.int32))
+    return logits.astype(jnp.float32), state
+
+
+# -- decode ------------------------------------------------------------------
+
+def decode_step(params, cfg, token_or_embed, state: DecodeState,
+                positions=None, opts: FwdOpts | None = None):
+    """One token for the whole stack. token: (B, 1) int32 (or (B,1,d) embeds).
+    Returns (logits (B,1,V), new DecodeState)."""
+    if cfg.input_mode == "embeddings" and token_or_embed.ndim == 3:
+        x = token_or_embed.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = apply_embed(params["embed"], token_or_embed, cfg)
+    p, n_groups = pattern(cfg)
+    kinds = layer_kinds(cfg)[:p]
+
+    def group_body(carry, scanned):
+        x = carry
+        group_params, caches = scanned
+        new_caches = []
+        for i, (mixer, ff) in enumerate(kinds):
+            gp = group_params[i]
+            c = caches[i]
+            h = apply_norm(gp["norm1"], x, cfg.norm)
+            if mixer == "attn":
+                y, nc = attn.attention_decode(
+                    gp["attn"], h, cfg, c, pos=state.pos,
+                    cache_len=state.cache_len, positions=positions)
+            elif mixer == "mamba":
+                y, nc = ssm_mod.mamba_decode(gp["mamba"], h, cfg, c)
+            else:
+                y, (s_wkv, shift) = rwkv_mod.rwkv_time_mix(
+                    gp["rwkv_t"], h, cfg,
+                    state=rwkv_mod.RWKVState(c.s, c.shift_t, c.shift_c))
+                nc = None
+            x = x + y
+            h = apply_norm(gp["norm2"], x, cfg.norm)
+            if ff == "mlp":
+                y = apply_mlp(gp["mlp"], h, cfg)
+            elif ff == "moe":
+                y, _ = moe_mod.apply_moe_sharded(gp["moe"], h, cfg, no_drop=True)
+            else:
+                y, shift_c = rwkv_mod.rwkv_channel_mix(
+                    gp["rwkv_c"], h, cfg,
+                    state=rwkv_mod.RWKVState(c.s, c.shift_t, c.shift_c))
+                nc = rwkv_mod.RWKVState(s=s_wkv, shift_t=shift.astype(x.dtype),
+                                        shift_c=shift_c.astype(x.dtype))
+            x = x + y
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = _maybe_scan(group_body, x,
+                                (params["blocks"], tuple(state.caches)),
+                                bool(opts and opts.unroll))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_head(params["embed"], x, cfg)
+    new_state = DecodeState(caches=list(new_caches), pos=state.pos + 1,
+                            cache_len=jnp.minimum(state.cache_len + 1,
+                                                  _cache_smax(state)))
+    return logits.astype(jnp.float32), new_state
+
+
+def _cache_smax(state: DecodeState):
+    for c in state.caches:
+        if isinstance(c, attn.KVCache):
+            return c.k.shape[2]
+    return jnp.asarray(2**30, jnp.int32)

@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed per spec:
+input_specs() provides precomputed log-mel *frame embeddings* (B, S_enc, d);
+the conv1d downsampler is outside scope). Sinusoidal positions on both sides
+(deviation from learned decoder positions noted in DESIGN.md), pre-LN
+blocks, GELU MLP, MHA with QKV bias, no RoPE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .layers import (ParamSpec, apply_embed, apply_head, apply_mlp, apply_norm,
+                     embed_spec, mlp_spec, norm_spec, stack_specs)
+
+
+def _sinusoid(s: int, d: int) -> jax.Array:
+    """Computed with jnp so it lowers as ops, not a giant HLO literal."""
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def enc_block_spec(cfg) -> dict:
+    return {"norm1": norm_spec(cfg), "attn": attn.attn_spec(cfg),
+            "norm2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+
+
+def dec_block_spec(cfg) -> dict:
+    return {"norm1": norm_spec(cfg), "self_attn": attn.attn_spec(cfg),
+            "norm_c": norm_spec(cfg), "cross_attn": attn.attn_spec(cfg),
+            "norm2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+
+
+def whisper_spec(cfg) -> dict:
+    return {
+        "embed": embed_spec(cfg),
+        "enc_blocks": stack_specs(enc_block_spec(cfg), cfg.encoder_layers),
+        "enc_final": norm_spec(cfg),
+        "dec_blocks": stack_specs(dec_block_spec(cfg), cfg.n_layers),
+        "final_norm": norm_spec(cfg),
+    }
+
+
+def _maybe_scan(body, init, xs, unroll: bool):
+    from .transformer import _maybe_scan as ms
+    return ms(body, init, xs, unroll)
+
+
+def encode(params, cfg, frames: jax.Array, unroll: bool = False) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> (B, S_enc, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + jnp.asarray(_sinusoid(x.shape[1], cfg.d_model)).astype(x.dtype)
+
+    def body(x, bp):
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        q, k, v = attn._qkv(bp["attn"], h, cfg)
+        y = attn.run_attention(q, k, v, causal=False, impl="xla")
+        y = jnp.einsum("bshe,hed->bsd", y, bp["attn"]["wo"].astype(x.dtype))
+        x = x + y
+        x = x + apply_mlp(bp["mlp"], apply_norm(bp["norm2"], x, cfg.norm), cfg)
+        return x, None
+
+    x, _ = _maybe_scan(body, x, params["enc_blocks"], unroll)
+    return apply_norm(params["enc_final"], x, cfg.norm)
+
+
+class WhisperState(NamedTuple):
+    self_caches: attn.KVCache    # (L, B, S_max, K, hd) ring caches
+    cross_k: jax.Array           # (L, B, S_enc, K, hd) fixed per request
+    cross_v: jax.Array
+    pos: jax.Array
+    cache_len: jax.Array
+
+
+def _dec_sublayers(bp, x, cfg, positions, enc_out=None, cross_kv=None,
+                   self_mode="train", cache=None, pos=None, cache_len=None,
+                   attn_impl="xla", chunk=1024, unroll=False):
+    """One decoder block; returns (x, new self cache, (ck, cv))."""
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    new_cache = None
+    if self_mode == "train":
+        y = attn.attention_train(bp["self_attn"], h, cfg, positions=positions,
+                                 use_rope=False, impl=attn_impl, chunk=chunk,
+                                 unroll=unroll)
+    elif self_mode == "prefill":
+        y, new_cache = attn.attention_prefill(bp["self_attn"], h, cfg,
+                                              positions=positions,
+                                              use_rope=False, impl=attn_impl,
+                                              chunk=chunk, unroll=unroll)
+    else:
+        y, new_cache = attn.attention_decode(bp["self_attn"], h, cfg, cache,
+                                             pos=pos, cache_len=cache_len,
+                                             use_rope=False)
+    x = x + y
+    h = apply_norm(bp["norm_c"], x, cfg.norm)
+    if cross_kv is None:
+        q, ck, cv = attn._qkv(bp["cross_attn"], h, cfg, xkv=enc_out)
+    else:
+        ck, cv = cross_kv
+        q, _, _ = attn._qkv(bp["cross_attn"], h, cfg, xkv=h[:, :1] * 0)
+    y = attn.run_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                           causal=False, impl="xla")
+    y = jnp.einsum("bshe,hed->bsd", y, bp["cross_attn"]["wo"].astype(x.dtype))
+    x = x + y
+    x = x + apply_mlp(bp["mlp"], apply_norm(bp["norm2"], x, cfg.norm), cfg)
+    return x, new_cache, (ck, cv)
+
+
+def whisper_loss_fn(params, cfg, batch, opts=None, z_coef: float = 1e-4):
+    """batch: enc_embeds (B, S_enc, d), tokens (B, S), labels (B, S)."""
+    unroll = bool(getattr(opts, "unroll", False))
+    enc_out = encode(params, cfg, batch["enc_embeds"], unroll=unroll)
+    x = apply_embed(params["embed"], batch["tokens"], cfg)
+    b, s = x.shape[:2]
+    x = x + jnp.asarray(_sinusoid(s, cfg.d_model)).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    impl = getattr(opts, "attn_impl", "xla") if opts is not None else "xla"
+    chunk = getattr(opts, "attn_chunk", 1024) if opts is not None else 1024
+
+    def body(x, bp):
+        x, _, _ = _dec_sublayers(bp, x, cfg, positions, enc_out=enc_out,
+                                 attn_impl=impl, chunk=chunk, unroll=unroll)
+        return x, None
+
+    x, _ = _maybe_scan(body, x, params["dec_blocks"], unroll)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_head(params["embed"], x, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ((lse - ll) * mask).sum() / denom
+    zl = z_coef * ((lse * mask) ** 2).sum() / denom
+    return ce + zl, {"ce": ce, "z_loss": zl,
+                     "moe_aux": jnp.zeros((), jnp.float32),
+                     "tokens": mask.sum()}
+
+
+def whisper_prefill(params, cfg, batch, opts=None, pad_to: int | None = None):
+    """Encode audio + run decoder prompt; returns (logits, WhisperState)."""
+    unroll = bool(getattr(opts, "unroll", False))
+    enc_out = encode(params, cfg, batch["enc_embeds"], unroll=unroll)
+    x = apply_embed(params["embed"], batch["tokens"], cfg)
+    b, s = x.shape[:2]
+    x = x + jnp.asarray(_sinusoid(s, cfg.d_model)).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    impl = getattr(opts, "attn_impl", "chunked") if opts is not None else "chunked"
+
+    def body(x, bp):
+        x, cache, ckv = _dec_sublayers(bp, x, cfg, positions, enc_out=enc_out,
+                                       self_mode="prefill", attn_impl=impl,
+                                       unroll=unroll)
+        return x, (cache, ckv)
+
+    x, (caches, ckvs) = _maybe_scan(body, x, params["dec_blocks"], unroll)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_head(params["embed"], x[:, -1:, :], cfg)
+    if pad_to is not None and pad_to > s:
+        pad = pad_to - s
+        caches = attn.KVCache(
+            k=jnp.pad(caches.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            v=jnp.pad(caches.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))))
+    state = WhisperState(self_caches=caches, cross_k=ckvs[0], cross_v=ckvs[1],
+                         pos=jnp.asarray(s, jnp.int32),
+                         cache_len=jnp.asarray(s, jnp.int32))
+    return logits.astype(jnp.float32), state
+
+
+def whisper_decode_step(params, cfg, token, state: WhisperState):
+    x = apply_embed(params["embed"], token, cfg)
+    s_max = state.self_caches.k.shape[2]
+    # sinusoidal row at the absolute position, computed directly (no table)
+    d = cfg.d_model
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = state.pos.astype(jnp.float32) * inv
+    row = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+    x = x + row.astype(x.dtype)[None, None, :]
+
+    def body(x, scanned):
+        bp, cache, ck, cv = scanned
+        x, new_cache, _ = _dec_sublayers(
+            bp, x, cfg, None, cross_kv=(ck, cv), self_mode="decode",
+            cache=cache, pos=state.pos, cache_len=state.cache_len)
+        return x, new_cache
+
+    x, new_caches = _maybe_scan(
+        body, x, (params["dec_blocks"], state.self_caches,
+                  state.cross_k, state.cross_v), unroll=False)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = apply_head(params["embed"], x, cfg)
+    new_state = WhisperState(self_caches=new_caches, cross_k=state.cross_k,
+                             cross_v=state.cross_v, pos=state.pos + 1,
+                             cache_len=jnp.minimum(state.cache_len + 1, s_max))
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,1 @@
+"""Serving: batched engine, sampling, bucketed scheduler."""

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with jit'd steps.
+
+Request flow mirrors production continuous batching at the granularity this
+substrate needs: requests are grouped into fixed-shape batches (padding to
+the bucket), prefilled once (building ring KV caches with decode headroom),
+then decoded step-by-step with per-request EOS masking; finished rows keep
+decoding into padding but are masked out of the results (slot reuse across
+bucket boundaries is the scheduler's job, serve/scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import build
+from repro.models.transformer import FwdOpts
+from .sampling import sample
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int = -1               # -1: never stop early
+    pad_id: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig(),
+                 run: RunConfig | None = None):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.bundle = build(cfg)
+        run = run or RunConfig()
+        opts = FwdOpts(attn_impl=run.attn_impl, attn_chunk=run.attn_chunk)
+        self._prefill = jax.jit(
+            lambda p, b, pad: self.bundle.prefill(p, b, opts, pad_to=pad),
+            static_argnums=(2,))
+        self._decode = jax.jit(self.bundle.decode)
+        self.stats = {"requests": 0, "prefill_tokens": 0, "decode_tokens": 0}
+
+    def generate(self, prompts: np.ndarray, *, seed: int = 0) -> np.ndarray:
+        """prompts: (B, S) int32 (left-aligned, pad with pad_id). Returns
+        (B, max_new_tokens) generated ids (pad after EOS)."""
+        b, s = prompts.shape
+        pad_to = s + self.scfg.max_new_tokens
+        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(prompts)},
+                                      pad_to)
+        self.stats["requests"] += b
+        self.stats["prefill_tokens"] += b * s
+        key = jax.random.key(seed)
+        out = np.full((b, self.scfg.max_new_tokens), self.scfg.pad_id, np.int32)
+        done = np.zeros(b, bool)
+        tok = None
+        for t in range(self.scfg.max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = sample(logits, sub, temperature=self.scfg.temperature,
+                         top_k=self.scfg.top_k)
+            ids = np.asarray(tok)[:, 0]
+            ids = np.where(done, self.scfg.pad_id, ids)
+            out[:, t] = ids
+            done |= (ids == self.scfg.eos_id)
+            self.stats["decode_tokens"] += int((~done).sum())
+            if done.all():
+                break
+            logits, state = self._decode(self.params, jnp.asarray(ids[:, None]),
+                                         state)
+        return out

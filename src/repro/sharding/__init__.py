@@ -1,0 +1,12 @@
+"""Sharding rules: logical axes -> mesh axes with divisibility fallbacks."""
+from .rules import (DEFAULT_RULES, abstract_tree, batch_pspec, constrain,
+                    current_mesh,
+                    pspec_for,
+                    shard_batch_specs, shard_decode_state, sharding_for,
+                    tree_shardings)
+
+__all__ = ["DEFAULT_RULES", "abstract_tree", "batch_pspec", "constrain",
+           "current_mesh",
+           "pspec_for",
+           "shard_batch_specs", "shard_decode_state", "sharding_for",
+           "tree_shardings"]

@@ -1,0 +1,219 @@
+"""Logical-axis -> mesh-axis rules with divisibility fallback chains.
+
+Every parameter/cache dim carries a logical name (see models/*.py specs).
+A rule is a priority list of mesh-axis tuples; for each tensor we walk its
+dims, assigning the first candidate that (a) exists on the mesh, (b) has not
+been used by another dim of the same tensor, and (c) divides the dim size.
+This is what lets odd published dims degrade gracefully instead of failing
+to lower: whisper's vocab 51865 falls back to replicated, qwen2-0.5b's 14
+heads fall through to head_dim sharding, grok's 8 experts fall through to
+expert-FFN tensor parallelism.
+
+Parallelism mapping (DP/FSDP/TP/EP/SP):
+  batch        -> (pod, data)      pure DP (gradient all-reduce)
+  embed        -> data             FSDP / ZeRO-3 parameter+optimizer sharding
+  heads/mlp/.. -> model            TP (Megatron-style)
+  expert       -> model            EP (falls back to expert_mlp TP)
+  kv_seq       -> model            SP for decode caches (sequence-sharded
+                                   attention: softmax stats all-reduce)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec
+
+Rules = dict[str, list[tuple[str, ...]]]
+
+DEFAULT_RULES: Rules = {
+    # parameters
+    "vocab": [("model",), ()],
+    "embed": [("data",), ()],
+    "embed_tbl": [()],        # see models/layers.embed_spec
+    "embed_out": [()],
+    "heads": [("model",), ()],
+    "kv_heads": [("model",), ()],
+    # head_dim deliberately unsharded by default: sharding it splits RoPE's
+    # rotate-half halves across devices (involuntary full remat in SPMD).
+    # Sharding kv_heads' fallback is replication (standard when kv < TP).
+    "head_dim": [()],
+    "mlp": [("model",), ()],
+    "expert": [("model",), ()],
+    "expert_in": [()],
+    "expert_mlp": [("model",), ()],
+    "ssm_inner": [("model",), ()],
+    "heads_flat": [("model",), ()],
+    "layers": [()],
+    None: [()],
+    # activations / caches
+    "batch": [("pod", "data"), ("data",), ()],
+    "seq_sp": [("model",), ()],   # sequence-parallel attention (odd head counts)
+    "exp_cap": [("data",), ()],   # MoE capacity dim when expert dim fell back
+    "seq": [()],
+    "kv_seq": [("model",), ()],
+    "act_embed": [()],
+}
+
+
+def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def pspec_for(shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh,
+              rules: Rules | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, name in zip(shape, axes):
+        assigned: Any = None
+        for cand in rules.get(name, [()]):
+            if not cand:
+                assigned = None
+                break
+            if not all(a in mesh.axis_names for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            size = _axis_size(mesh, cand)
+            if dim % size == 0 and dim >= size:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        entries.append(assigned)
+    return P(*entries)
+
+
+def current_mesh():
+    """The ambient mesh: jax.sharding.set_mesh context if set, else the
+    legacy `with mesh:` context, else None."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return am
+    except Exception:
+        pass
+    try:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            from jax.interpreters import pxla
+            pm = pxla.thread_resources.env.physical_mesh
+        if pm is not None and pm.axis_names:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, axes: Sequence[str | None], rules: Rules | None = None):
+    """with_sharding_constraint by LOGICAL axes, using the ambient mesh.
+    No-op outside a mesh context (single-device tests/examples)."""
+    try:
+        mesh = current_mesh()
+        if mesh is None:
+            return x
+        spec = pspec_for(x.shape, axes, mesh, rules)
+        if isinstance(mesh, Mesh):
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def sharding_for(spec: ParamSpec, mesh: Mesh, rules: Rules | None = None) -> NamedSharding:
+    return NamedSharding(mesh, pspec_for(spec.shape, spec.axes, mesh, rules))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules | None = None):
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: sharding_for(s, mesh, rules), spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_tree(spec_tree, mesh: Mesh, rules: Rules | None = None,
+                  dtype_override=None):
+    """ParamSpec tree -> ShapeDtypeStruct tree with shardings attached."""
+    def mk(s: ParamSpec):
+        return jax.ShapeDtypeStruct(
+            s.shape, dtype_override or s.dtype,
+            sharding=sharding_for(s, mesh, rules))
+    return jax.tree_util.tree_map(
+        mk, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# input-batch and cache shardings (activation side)
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh) -> Any:
+    cand = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return cand if len(cand) > 1 else cand[0]
+
+
+def shard_batch_specs(specs: Mapping[str, jax.ShapeDtypeStruct], mesh: Mesh,
+                      rules: Rules | None = None) -> dict:
+    """Attach shardings to model-input ShapeDtypeStructs.
+
+    tokens/labels (B, S): batch over (pod, data). embeds (B, S, d) likewise.
+    positions (3, B, S): batch on dim 1. Falls back to replication when the
+    batch does not divide (e.g. long_500k batch=1)."""
+    out = {}
+    bp = batch_pspec(mesh)
+    bsz = _axis_size(mesh, bp if isinstance(bp, tuple) else (bp,))
+    for name, sds in specs.items():
+        dims: list[Any] = [None] * len(sds.shape)
+        bdim = 1 if name == "positions" else 0
+        if sds.shape[bdim] % bsz == 0:
+            dims[bdim] = bp
+        elif "data" in mesh.axis_names and sds.shape[bdim] % mesh.shape["data"] == 0:
+            dims[bdim] = "data"
+        out[name] = jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, P(*dims)))
+    return out
+
+
+def cache_axes(cfg, leaf_path: str, shape: tuple[int, ...]) -> tuple:
+    """Logical axes for a decode-cache leaf (stacked (G, B, S, K, hd) etc.)."""
+    n = len(shape)
+    if n == 5 and "cross" not in leaf_path:        # KV cache (G,B,S,K,hd)
+        return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    if n == 5:                                      # whisper cross (L,B,Se,K,hd)
+        return ("layers", "batch", "seq", "kv_heads", "head_dim")
+    if n == 4:                                      # ssm h (G,B,di,N)
+        return ("layers", "batch", "ssm_inner", None)
+    if n == 3:                                      # conv/shift (G,B,di)
+        return ("layers", "batch", "ssm_inner")
+    return ("layers",) + (None,) * (n - 1)
+
+
+def shard_decode_state(cfg, state, mesh: Mesh, rules: Rules | None = None):
+    """Attach shardings to an abstract DecodeState/WhisperState."""
+    rules = rules or DEFAULT_RULES
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        if leaf.shape == ():
+            out.append(jax.ShapeDtypeStruct((), leaf.dtype,
+                                            sharding=NamedSharding(mesh, P())))
+            continue
+        axes: tuple
+        if "rwkv" in cfg.family or cfg.rwkv:
+            # rwkv state s: (G,B,H,dk,dv); shifts (G,B,d)
+            if len(leaf.shape) == 5:
+                axes = ("layers", "batch", "heads", None, None)
+            elif len(leaf.shape) == 3:
+                axes = ("layers", "batch", None)
+            else:
+                axes = cache_axes(cfg, pstr, leaf.shape)
+        else:
+            axes = cache_axes(cfg, pstr, leaf.shape)
+        pspec = pspec_for(leaf.shape, axes, mesh, rules)
+        out.append(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, pspec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, schedules, loop, gradient compression."""

@@ -1,0 +1,156 @@
+"""Optimizers: AdamW and Adafactor (factored second moment).
+
+Spec-level state construction (`state_specs`) mirrors the params' logical
+axes so optimizer state inherits FSDP/TP sharding — including the *reduced*
+axes of Adafactor's row/column statistics. Adafactor is the default for the
+1e12-param MoE configs: its state is O(rows+cols) per matrix, which is what
+makes kimi-k2 trainable on v5e-class HBM (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptHyper:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # adafactor
+    decay_rate: float = 0.8
+    eps2: float = 1e-30
+    clip_threshold: float = 1.0
+    factored_min: int = 128       # factor matrices with both dims >= this
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _factorable(shape, hyper) -> bool:
+    return len(shape) >= 2 and shape[-1] >= hyper.factored_min and \
+        shape[-2] >= hyper.factored_min
+
+
+# ---------------------------------------------------------------------------
+# state at the ParamSpec level (drives both init and abstract shardings)
+# ---------------------------------------------------------------------------
+
+def state_specs(param_specs, hyper: OptHyper):
+    if hyper.name == "adamw":
+        zero = lambda s: ParamSpec(s.shape, s.axes, jnp.float32, "zeros")
+        return {
+            "m": jax.tree_util.tree_map(zero, param_specs, is_leaf=_is_spec),
+            "v": jax.tree_util.tree_map(zero, param_specs, is_leaf=_is_spec),
+            "step": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+    assert hyper.name == "adafactor", hyper.name
+
+    def vr(s: ParamSpec):
+        if _factorable(s.shape, hyper):
+            return ParamSpec(s.shape[:-1], s.axes[:-1], jnp.float32, "zeros")
+        return ParamSpec(s.shape, s.axes, jnp.float32, "zeros")
+
+    def vc(s: ParamSpec):
+        if _factorable(s.shape, hyper):
+            return ParamSpec(s.shape[:-2] + s.shape[-1:],
+                             s.axes[:-2] + s.axes[-1:], jnp.float32, "zeros")
+        return ParamSpec((1,), (None,), jnp.float32, "zeros")  # unused stub
+
+    return {
+        "vr": jax.tree_util.tree_map(vr, param_specs, is_leaf=_is_spec),
+        "vc": jax.tree_util.tree_map(vc, param_specs, is_leaf=_is_spec),
+        "step": ParamSpec((), (), jnp.int32, "zeros"),
+    }
+
+
+def init_state(params, hyper: OptHyper):
+    """Concrete zeros matching state_specs (host-side smoke/examples path)."""
+    specs = state_specs(
+        jax.tree_util.tree_map(
+            lambda p: ParamSpec(p.shape, (None,) * p.ndim, p.dtype), params),
+        hyper)
+    from repro.models.layers import init_params
+    return init_params(specs, jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+def _adamw_update(hyper, p, g, m, v, step):
+    g = g.astype(jnp.float32)
+    m = hyper.b1 * m + (1 - hyper.b1) * g
+    v = hyper.b2 * v + (1 - hyper.b2) * g * g
+    mh = m / (1 - hyper.b1 ** step)
+    vh = v / (1 - hyper.b2 ** step)
+    upd = mh / (jnp.sqrt(vh) + hyper.eps)
+    if p.ndim >= 2:
+        upd = upd + hyper.weight_decay * p.astype(jnp.float32)
+    return (p - hyper.lr * upd.astype(p.dtype)).astype(p.dtype), m, v
+
+
+def _adafactor_update(hyper, p, g, vr, vc, step):
+    g = g.astype(jnp.float32)
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-hyper.decay_rate)
+    g2 = g * g + hyper.eps2
+    if _factorable(p.shape, hyper):
+        vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+        vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+        rfac = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), hyper.eps2)
+        pre = jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+        upd = g / jnp.maximum(pre, 1e-30)
+    else:
+        vr = beta2 * vr + (1 - beta2) * g2
+        upd = g * jax.lax.rsqrt(jnp.maximum(vr, hyper.eps2))
+    # RMS clipping
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms / hyper.clip_threshold)
+    if p.ndim >= 2:
+        upd = upd + hyper.weight_decay * p.astype(jnp.float32)
+    return (p - hyper.lr * upd.astype(p.dtype)).astype(p.dtype), vr, vc
+
+
+def apply_updates(hyper: OptHyper, params, grads, state, lr_scale=1.0):
+    """Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    h = dataclasses.replace(hyper, lr=hyper.lr * lr_scale)
+    if hyper.name == "adamw":
+        leaves = jax.tree_util.tree_map(
+            lambda p, g, m, v: _adamw_update(h, p, g, m, v, step),
+            params, grads, state["m"], state["v"])
+        new_p = jax.tree_util.tree_map(lambda t: t[0], leaves,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], leaves,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], leaves,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+    leaves = jax.tree_util.tree_map(
+        lambda p, g, vr, vc: _adafactor_update(h, p, g, vr, vc, step),
+        params, grads, state["vr"], state["vc"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], leaves,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_vr = jax.tree_util.tree_map(lambda t: t[1], leaves,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_vc = jax.tree_util.tree_map(lambda t: t[2], leaves,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"vr": new_vr, "vc": new_vc, "step": step}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype),
+                                  grads), gn

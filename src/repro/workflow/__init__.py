@@ -1,0 +1,1 @@
+"""Mini workflow manager with GeStore integration (the paper's GePan)."""

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see exactly
+one CPU device (the 512-device override belongs ONLY to launch/dryrun.py;
+multi-device tests spawn subprocesses that set their own flags)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,108 @@
+"""GeStore facade: generate/merge around unmodified tools, cache behaviour,
+and the BLAST e-value merger correction (paper §III.A, §IV.B)."""
+import math
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core.parsers import FastaParser
+
+
+def mk_fasta(n, mut=(), drop=(), rng_seed=7):
+    rng = np.random.default_rng(rng_seed)
+    out = []
+    for i in range(n):
+        # draw BEFORE the drop check: entry i's sequence must not depend on
+        # which other entries are dropped
+        seq = "".join(rng.choice(list("ACDEFGHIKLMNPQRSTVWY"), 30))
+        if i in drop:
+            continue
+        if i in mut:
+            seq = seq[:5] + "WWWWW" + seq[10:]
+        out.append(f">SEQ{i:04d} desc {i}\n{seq}\n")
+    return "".join(out)
+
+
+@pytest.fixture
+def gestore(tmp_path):
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=64, desc_width=16))
+    reg.register_tool(core.ToolPlugin(
+        "blastp",
+        core.FileGenerator(parser="fasta",
+                           output_fields=["sequence", "length", "desc"],
+                           significant_fields=["sequence", "length"]),
+        merger=core.BlastEvalueMerger()))
+    gs = core.GeStore(str(tmp_path), reg)
+    gs.add_release("up", 100, mk_fasta(50), parser_name="fasta")
+    gs.add_release("up", 200, mk_fasta(55, mut={3, 7}, drop={11}),
+                   parser_name="fasta")
+    return gs
+
+
+def test_full_and_incremental_generation(gestore):
+    full = gestore.generate_files("blastp", "up", t_version=100)
+    assert full.mode == "full" and full.n_entries == 50
+    inc = gestore.generate_files("blastp", "up", t_version=200, t_last=100)
+    # 6 new (50..54, minus the dropped 11 which existed) + 2 mutated
+    assert inc.mode == "increment"
+    assert inc.n_entries == 5 + 2
+    assert len(inc.context["deleted_keys"]) == 1
+    assert len(inc.context["updated_keys"]) == 2
+    assert inc.context["db_size_new"] > 0
+
+
+def test_cache_hit_and_eviction(gestore):
+    a = gestore.generate_files("blastp", "up", t_version=100)
+    b = gestore.generate_files("blastp", "up", t_version=100)
+    assert b.mode == "cached" and b.path == a.path
+    assert gestore.cache.hits >= 1
+    n = gestore.cache.evict(0)
+    assert n >= 1
+    c = gestore.generate_files("blastp", "up", t_version=100)
+    assert c.mode == "full"              # regenerated after eviction
+
+
+def test_pinned_version_reproducibility(gestore):
+    v1a = gestore.generate_files("blastp", "up", t_version=100)
+    gestore.add_release("up", 300, mk_fasta(60, mut={1}), parser_name="fasta")
+    v1b = gestore.generate_files("blastp", "up", t_version=100)
+    assert open(v1a.path).read() == open(v1b.path).read()
+
+
+def test_taxon_filter(gestore):
+    f = gestore.generate_files("blastp", "up", t_version=100,
+                               key_filter=r"SEQ000")
+    assert f.n_entries == 10
+
+
+def test_evalue_merger_rescaling():
+    m = core.BlastEvalueMerger()
+    prev = "q1\tS1\t90.0\t30\t3\t0\t1\t30\t1\t30\t1.0e-10\t50.0\n" \
+           "q1\tS2\t80.0\t30\t6\t0\t1\t30\t1\t30\t1.0e-05\t40.0\n"
+    partial = "q1\tS3\t95.0\t30\t1\t0\t1\t30\t1\t30\t2.0e-12\t60.0\n"
+    merged = m.merge(prev, partial, context={
+        "db_size_old": 1000, "db_size_new": 2000,
+        "deleted_keys": [b"S2"], "updated_keys": [], "max_hits_per_query": 10})
+    lines = merged.strip().splitlines()
+    subjects = [l.split("\t")[1] for l in lines]
+    assert "S2" not in subjects             # deleted subject dropped
+    assert set(subjects) == {"S1", "S3"}
+    ev = {l.split("\t")[1]: float(l.split("\t")[10]) for l in lines}
+    assert math.isclose(ev["S1"], 2.0e-10, rel_tol=0.05)   # rescaled 2x
+    assert math.isclose(ev["S3"], 2.0e-12, rel_tol=0.05)   # fresh: untouched
+    # best hit first per query
+    assert subjects[0] == "S3"
+
+
+def test_run_tool_provenance(gestore):
+    def tool(path):
+        n = open(path).read().count(">")
+        return f"q1\tS1\t90.0\t{n}\t0\t0\t1\t30\t1\t30\t1e-10\t50.0\n"
+
+    out, gen = gestore.run_tool("blastp", "up", tool, t_version=100)
+    assert "q1" in out
+    runs = list(gestore.tables.runs.values())
+    assert any(r.tool == "blastp" and r.status == "done" for r in runs)

@@ -1,0 +1,175 @@
+"""Per-kernel interpret-mode parity vs the pure-jnp oracles (ref.py),
+swept over shapes and dtypes + hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES_2D = [(1, 1), (7, 3), (512, 8), (513, 5), (1000, 16), (2048, 1)]
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_fingerprint_matches_ref(shape, rng):
+    x = jnp.asarray(rng.integers(-2**31, 2**31 - 1, shape, dtype=np.int32))
+    assert np.array_equal(np.asarray(ops.fingerprint(x, interpret=True)),
+                          np.asarray(ref.ref_fingerprint(x)))
+
+
+def test_fingerprint_collision_resistance(rng):
+    """1-element perturbations must change the fingerprint."""
+    x = rng.integers(-1000, 1000, (200, 8), dtype=np.int32)
+    base = ops.fingerprint_rows(x)
+    for i in range(0, 200, 17):
+        y = x.copy()
+        y[i, i % 8] += 1
+        assert not np.array_equal(ops.fingerprint_rows(y)[i], base[i])
+
+
+@pytest.mark.parametrize("dtype", ["int32", "float32", "int64", "int8", "int16"])
+def test_fingerprint_rows_dtypes(dtype, rng):
+    x = rng.integers(-100, 100, (64, 4)).astype(dtype)
+    fp = ops.fingerprint_rows(x)
+    assert fp.shape == (64, 2)
+    y = x.copy()
+    y[5, 2] += 1
+    fp2 = ops.fingerprint_rows(y)
+    assert not np.array_equal(fp[5], fp2[5])
+    assert np.array_equal(np.delete(fp, 5, 0), np.delete(fp2, 5, 0))
+
+
+# ---------------------------------------------------------------------------
+# masked_cumsum / version_select
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=0, max_size=300),
+       st.integers(-5, 60))
+def test_masked_cumsum_property(ts_list, t):
+    ts = jnp.asarray(sorted(ts_list), jnp.int32)
+    got = np.asarray(ops.masked_cumsum(ts, t, interpret=True))
+    want = np.cumsum(np.asarray(ts) <= t).astype(np.int32)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 60), st.integers(0, 4), st.integers(0, 99))
+def test_version_select_property(n_rows, max_extra, t):
+    rng = np.random.default_rng(n_rows * 7 + max_extra)
+    rows, tss, vals = [], [], []
+    for r in range(n_rows):
+        k = rng.integers(0, max_extra + 2)
+        for ts in sorted(rng.integers(0, 100, k)):
+            rows.append(r)
+            tss.append(ts)
+            vals.append(rng.integers(-50, 50, 3))
+    rows = np.asarray(rows or [0][:0], np.int32)
+    ptr = np.zeros(n_rows + 1, np.int32)
+    if len(rows):
+        np.add.at(ptr, rows + 1, 1)
+    ptr = np.cumsum(ptr).astype(np.int32)
+    tss = np.asarray(tss, np.int64)
+    vals = (np.stack(vals).astype(np.int32) if vals
+            else np.zeros((0, 3), np.int32))
+    out, found = ops.version_select(jnp.asarray(vals),
+                                    jnp.asarray(tss.astype(np.int32)),
+                                    jnp.asarray(ptr), t, interpret=True)
+    # brute force oracle
+    for r in range(n_rows):
+        seg = slice(ptr[r], ptr[r + 1])
+        cand = [i for i in range(*seg.indices(len(tss))) if tss[i] <= t]
+        if cand:
+            assert bool(found[r])
+            assert np.array_equal(np.asarray(out)[r], vals[cand[-1]])
+        else:
+            assert not bool(found[r])
+
+
+# ---------------------------------------------------------------------------
+# delta codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["int32", "float32", "int8", "int16"])
+@pytest.mark.parametrize("shape", [(5, 3), (700, 8), (513, 1)])
+def test_delta_roundtrip(dtype, shape, rng):
+    a = rng.integers(-1000, 1000, shape).astype(dtype)
+    b = rng.integers(-1000, 1000, shape).astype(dtype)
+    d, _stat = ops.delta_pack(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    assert np.array_equal(np.asarray(d),
+                          np.asarray(ref.ref_delta_pack(jnp.asarray(a), jnp.asarray(b))))
+    u = ops.delta_unpack(d, jnp.asarray(b), interpret=True)
+    assert np.array_equal(np.asarray(u), a)
+
+
+def test_delta_float_xor_sparsity(rng):
+    """Unchanged floats XOR to exact zero (the compressibility win)."""
+    a = rng.normal(size=(100, 8)).astype(np.float32)
+    b = a.copy()
+    b[::5] *= 2.0
+    d, nz = ops.delta_pack(jnp.asarray(b), jnp.asarray(a), interpret=True)
+    d = np.asarray(d)
+    assert np.all(d.view(np.int32)[1::5] == 0)
+    assert np.all(d.view(np.int32)[::5] != 0)
+
+
+def test_narrow_dtype():
+    assert ops.narrow_dtype(3) == jnp.int8
+    assert ops.narrow_dtype(1000) == jnp.int16
+    assert ops.narrow_dtype(10**6) == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# masked merge
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 600), st.integers(1, 9), st.integers(0, 2**31 - 2))
+def test_masked_merge_property(n, w, seed):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, w)).astype(np.float32)
+    upd = rng.normal(size=(n, w)).astype(np.float32)
+    rm = rng.random(n) < 0.4
+    fm = rng.random(w) < 0.7
+    tsb = rng.integers(0, 100, n).astype(np.int64)
+    got = ops.masked_merge(jnp.asarray(base), jnp.asarray(upd),
+                           jnp.asarray(rm), jnp.asarray(fm),
+                           jnp.asarray(tsb), 777, interpret=True)
+    want = ref.ref_masked_merge(jnp.asarray(base), jnp.asarray(upd),
+                                jnp.asarray(rm), jnp.asarray(fm),
+                                jnp.asarray(tsb), 777)
+    assert np.array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,sk,h,kh,d", [
+    (2, 256, 256, 8, 4, 64),
+    (1, 100, 300, 4, 4, 32),
+    (1, 1, 129, 8, 8, 64),
+    (1, 37, 37, 2, 1, 128),
+    (2, 128, 640, 4, 2, 16),
+])
+def test_flash_attention_vs_ref(b, sq, sk, h, kh, d, rng):
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, kh, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.ref_attention(q, k, v)
+    assert np.max(np.abs(np.asarray(got) - np.asarray(want))) < 3e-5
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.normal(size=(1, 64, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    got = np.asarray(ops.flash_attention(q, k, v, interpret=True), dtype=np.float32)
+    want = np.asarray(ref.ref_attention(q, k, v), dtype=np.float32)
+    assert np.max(np.abs(got - want)) < 3e-2

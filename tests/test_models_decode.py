@@ -1,0 +1,86 @@
+"""Serving-path correctness: prefill + one decode step must equal the full
+forward over the extended sequence, for every architecture family."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models import build
+from repro.models.transformer import FwdOpts
+
+# parity tests pin the xla attention impl so they isolate cache/state logic
+# from chunked-vs-full attention precision (bf16 compact prefill logits)
+XLA = FwdOpts(attn_impl="xla")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke_config(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.key(0))
+    B, S = 2, 12
+    rng = np.random.default_rng(0)
+    if cfg.family == "encdec":
+        enc = jnp.asarray(rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)),
+                          jnp.float32).astype(jnp.bfloat16)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+        _, state = bundle.prefill(params, {"enc_embeds": enc,
+                                           "tokens": toks[:, :S]}, XLA, pad_to=S + 4)
+        logits_d, state2 = bundle.decode(params, toks[:, S:S + 1], state)
+        logits_ref, _ = bundle.prefill(params, {"enc_embeds": enc,
+                                                "tokens": toks}, XLA)
+        assert int(state2.pos) == S + 1
+    elif cfg.input_mode == "embeddings":
+        emb = jnp.asarray(rng.normal(size=(B, S + 1, cfg.d_model)),
+                          jnp.float32).astype(jnp.bfloat16)
+        pos = jnp.asarray(np.tile(np.arange(S + 1), (3, B, 1)), jnp.int32)
+        _, state = bundle.prefill(params, {"embeds": emb[:, :S],
+                                           "positions": pos[:, :, :S]},
+                                  XLA, pad_to=S + 4)
+        logits_d, _ = bundle.decode(params, emb[:, S:S + 1], state,
+                                    positions=pos[:, :, S:S + 1])
+        logits_ref, _ = bundle.prefill(params, {"embeds": emb, "positions": pos}, XLA)
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+        _, state = bundle.prefill(params, {"tokens": toks[:, :S]}, XLA, pad_to=S + 4)
+        logits_d, _ = bundle.decode(params, toks[:, S:S + 1], state)
+        logits_ref, _ = bundle.prefill(params, {"tokens": toks}, XLA)
+    err = float(jnp.max(jnp.abs(logits_d - logits_ref)))
+    # jamba's 8-deep hybrid smoke accumulates bf16 drift near the generic
+    # gate (and CPU oneDNN reduction order jitters run-to-run); its
+    # correctness is pinned by the exact-seq-mixer tests, so the logits
+    # tolerance is family-scaled here.
+    tol = 0.5 if cfg.family == "hybrid" else 0.2
+    assert err < tol, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-7b", "jamba-v0.1-52b"])
+def test_multi_step_decode(arch):
+    """8 sequential decode steps equal one long prefill."""
+    cfg = get_smoke_config(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.key(0))
+    B, S, N = 2, 8, 8
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + N)), jnp.int32)
+    _, state = bundle.prefill(params, {"tokens": toks[:, :S]}, XLA, pad_to=S + N)
+    last = None
+    for t in range(N):
+        last, state = bundle.decode(params, toks[:, S + t:S + t + 1], state)
+    ref, _ = bundle.prefill(params, {"tokens": toks}, XLA)
+    err = float(jnp.max(jnp.abs(last - ref)))
+    tol = 0.5 if cfg.family == "hybrid" else 0.25   # see parity-test note
+    assert err < tol, (arch, err)
+
+
+def test_decode_ring_at_capacity():
+    """When the cache is full, decode still runs (sliding-window ring)."""
+    cfg = get_smoke_config("llama3.2-1b")
+    bundle = build(cfg)
+    params = bundle.init(jax.random.key(0))
+    toks = jnp.asarray(np.arange(10)[None, :] % cfg.vocab, jnp.int32)
+    _, state = bundle.prefill(params, {"tokens": toks}, XLA)  # capacity == 10
+    for _ in range(4):
+        logits, state = bundle.decode(params, toks[:, :1], state)
+        assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,88 @@
+"""Format-parser roundtrips (paper §IV.B file formats)."""
+import numpy as np
+
+from repro.core.parsers import (BlastTabParser, FastaParser, MgaParser,
+                                UniProtParser)
+
+FASTA = """>P00001 subunit alpha
+MKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ
+>P00002
+ACDEFGHIKLMNPQRSTVWY
+"""
+
+UNIPROT = """ID   TEST1_HUMAN             Reviewed;          33 AA.
+AC   P00001; Q9999;
+DE   RecName: Full=Test protein 1;
+GN   Name=TST1;
+OS   Homo sapiens (Human).
+OX   NCBI_TaxID=9606;
+KW   Test; Example.
+SQ   SEQUENCE   33 AA;  3707 MW;  DEADBEEF CRC64;
+     MKTAYIAKQR QISFVKSHFS RQLEERLGLI EVQ
+//
+ID   TEST2_ECOLI             Reviewed;          20 AA.
+AC   P00002;
+OS   Escherichia coli.
+OX   NCBI_TaxID=562;
+SQ   SEQUENCE   20 AA;  2202 MW;  CAFEBABE CRC64;
+     ACDEFGHIKL MNPQRSTVWY
+//
+"""
+
+BLAST = "q1\tP00001\t98.500\t33\t1\t0\t1\t33\t1\t33\t1.2e-15\t68.2\n" \
+        "q1\tP00002\t45.000\t20\t11\t0\t1\t20\t1\t20\t0.001\t32.1\n"
+
+MGA = """# contig001
+gene_1\t100\t400\t+\t0\t11\t8.21\t
+gene_2\t500\t800\t-\t0\t11\t5.10\t
+# contig002
+gene_1\t1\t250\t+\t0\t11\t12.00\t
+"""
+
+
+def test_fasta_roundtrip():
+    p = FastaParser(seq_width=64, desc_width=32)
+    keys, table = p.parse_text(FASTA)
+    assert [k.decode() for k in keys] == ["P00001", "P00002"]
+    assert table["length"][0, 0] == 33
+    out = "".join(p.format_entry(k, {n: table[n][i] for n in table})
+                  for i, k in enumerate(keys))
+    keys2, table2 = p.parse_text(out)
+    assert keys2 == keys
+    assert np.array_equal(table2["sequence"], table["sequence"])
+
+
+def test_uniprot_parse():
+    p = UniProtParser(seq_width=64)
+    keys, table = p.parse_text(UNIPROT)
+    assert [k.decode() for k in keys] == ["P00001", "P00002"]
+    assert table["length"][0, 0] == 33
+    assert table["taxid"][0, 0] == 9606
+    assert table["taxid"][1, 0] == 562
+    # annotation captured but separate from sequence (BLAST significance)
+    assert table["annotation"][0].any()
+    fasta = p.format_entry(keys[0], {n: table[n][0] for n in table})
+    assert fasta.startswith(">P00001\n")
+    assert "MKTAYIAKQR" in fasta.replace("\n", "")
+
+
+def test_blast_tab_roundtrip():
+    p = BlastTabParser()
+    keys, table = p.parse_text(BLAST)
+    assert len(keys) == 2
+    assert abs(10 ** table["log10_evalue"][0, 0] - 1.2e-15) < 1e-16
+    line = p.format_entry(keys[0], {n: table[n][0] for n in table})
+    cols = line.strip().split("\t")
+    assert cols[0] == "q1" and cols[1] == "P00001"
+    keys2, table2 = p.parse_text(line)
+    assert keys2[0] == keys[0]
+    assert np.allclose(table2["bitscore"], table["bitscore"][:1])
+
+
+def test_mga_parse():
+    p = MgaParser()
+    keys, table = p.parse_text(MGA)
+    assert [k.decode() for k in keys] == [
+        "contig001|gene_1", "contig001|gene_2", "contig002|gene_1"]
+    assert np.array_equal(table["coords"][0], [100, 400, 1])
+    assert np.array_equal(table["coords"][1], [500, 800, -1])

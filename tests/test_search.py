@@ -1,0 +1,88 @@
+"""Neural-BLAST: incremental update + merge must EXACTLY equal full
+recompute (top-k, scores, and the e-value normalizer Z)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core.store import FieldSchema, VersionedStore
+
+
+def build_store(rng, n, w=16):
+    store = VersionedStore("c", [FieldSchema("sequence", w, "int32")])
+    store.update(100, [f"d{i}" for i in range(n)],
+                 {"sequence": rng.integers(0, 20, (n, w)).astype(np.int32)})
+    return store
+
+
+def mutate(store, rng, t0, t1, n_mut, n_new, n_del, w=16):
+    view = store.get_version(t0)
+    keys = [k.decode() for k in view.keys]
+    tbl = view.values["sequence"].copy()
+    mut = rng.choice(len(keys), size=min(n_mut, len(keys)), replace=False)
+    tbl[mut] = rng.integers(0, 20, (len(mut), w))
+    drop = set(rng.choice(len(keys), size=min(n_del, len(keys) - 1),
+                          replace=False).tolist()) - set(mut.tolist())
+    keep = [i for i in range(len(keys)) if i not in drop]
+    new_keys = [f"n{t1}_{i}" for i in range(n_new)]
+    all_keys = [keys[i] for i in keep] + new_keys
+    all_tbl = np.concatenate([tbl[keep],
+                              rng.integers(0, 20, (n_new, w)).astype(np.int32)])
+    store.update(t1, all_keys, {"sequence": all_tbl})
+
+
+def encoder(rng_seed=0, w=16, d=8):
+    proj = np.random.default_rng(rng_seed).normal(size=(w, d)).astype(np.float32)
+    return lambda toks: (toks.astype(np.float32) @ proj) / 4.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10**6), st.integers(0, 6), st.integers(0, 5),
+       st.integers(0, 3))
+def test_incremental_equals_full(seed, n_mut, n_new, n_del):
+    rng = np.random.default_rng(seed)
+    store = build_store(rng, 40)
+    mutate(store, rng, 100, 200, n_mut, n_new, n_del)
+    enc = encoder()
+    q = rng.integers(0, 20, (3, 16)).astype(np.int32)
+    qids = [b"q0", b"q1", b"q2"]
+
+    db = core.EmbeddingSearchDB(store, enc, seg_size=8)
+    db.refresh(100)
+    r1 = db.query(qids, q, ts=100, k=5)
+    r2 = db.incremental_query(r1, qids, q, t_last=100, ts=200, k=5)
+
+    full = core.EmbeddingSearchDB(store, enc, seg_size=8)
+    full.refresh(200)
+    rf = full.query(qids, q, ts=200, k=5)
+
+    assert np.array_equal(r2.topk_idx, rf.topk_idx)
+    assert np.allclose(r2.topk_score, rf.topk_score, atol=1e-5)
+    assert np.allclose(r2.z, rf.z, atol=1e-4)
+
+
+def test_incremental_work_is_proportional():
+    rng = np.random.default_rng(1)
+    store = build_store(rng, 200)
+    mutate(store, rng, 100, 200, n_mut=4, n_new=2, n_del=0)
+    db = core.EmbeddingSearchDB(store, encoder(), seg_size=16)
+    db.refresh(100)
+    assert db.n_embedded_total == 200
+    r1 = db.query([b"q"], rng.integers(0, 20, (1, 16)).astype(np.int32), ts=100)
+    r2 = db.incremental_query(r1, [b"q"],
+                              rng.integers(0, 20, (1, 16)).astype(np.int32),
+                              t_last=100, ts=200)
+    assert db.n_embedded_total <= 200 + 6      # only the increment re-embedded
+
+
+def test_evalue_normalization():
+    rng = np.random.default_rng(2)
+    store = build_store(rng, 32)
+    db = core.EmbeddingSearchDB(store, encoder(), seg_size=8)
+    db.refresh(100)
+    q = rng.integers(0, 20, (2, 16)).astype(np.int32)
+    r = db.query([b"a", b"b"], q, ts=100, k=32)
+    ev = r.evalue()
+    sums = ev.sum(axis=1)
+    assert np.all(sums <= 1.0 + 1e-5)          # p = exp(s - Z) over full corpus
+    assert np.all(sums > 0.95)                 # k = corpus size -> sums to 1

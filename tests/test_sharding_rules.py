@@ -1,0 +1,84 @@
+"""Sharding-rule unit tests: fallback chains against the published dims
+(these run with a FAKE mesh shape object — no devices needed)."""
+import numpy as np
+import pytest
+
+from repro.sharding.rules import DEFAULT_RULES, pspec_for
+from jax.sharding import PartitionSpec as P
+
+
+class FakeMesh:
+    """Duck-typed mesh: pspec_for only reads axis_names and shape."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_tp_fsdp():
+    # llama wq: (2048, 32, 64) (embed, heads, head_dim)
+    ps = pspec_for((2048, 32, 64), ("embed", "heads", "head_dim"), SINGLE)
+    assert ps == P("data", "model", None)
+
+
+def test_kv_heads_fallback_replicates():
+    # grok wk: kv=8 not divisible by 16 -> replicated (NOT head_dim sharding)
+    ps = pspec_for((6144, 8, 128), ("embed", "kv_heads", "head_dim"), SINGLE)
+    assert ps == P("data", None, None)
+
+
+def test_qwen_odd_heads_fallback():
+    # qwen2-0.5b: 14 heads -> replicated attention
+    ps = pspec_for((896, 14, 64), ("embed", "heads", "head_dim"), SINGLE)
+    assert ps == P("data", None, None)
+
+
+def test_whisper_vocab_fallback():
+    # 51865 % 16 != 0 -> replicated vocab
+    ps = pspec_for((51865, 1024), ("vocab", "embed_tbl"), SINGLE)
+    assert ps == P(None, None)
+
+
+def test_kimi_expert_parallelism():
+    # kimi wi: (384, 7168, 2048): experts 384/16 -> EP on model
+    ps = pspec_for((384, 7168, 2048), ("expert", "embed", "expert_mlp"), SINGLE)
+    assert ps == P("model", "data", None)
+
+
+def test_grok_expert_fallback_to_tp():
+    # grok wi: (8, 6144, 32768): 8 experts < 16 -> expert-FFN TP instead
+    ps = pspec_for((8, 6144, 32768), ("expert", "embed", "expert_mlp"), SINGLE)
+    assert ps == P(None, "data", "model")
+
+
+def test_axis_used_once_per_tensor():
+    # both dims want "model": second falls through
+    ps = pspec_for((64, 64), ("heads", "mlp"), FakeMesh({"model": 16}))
+    assert ps == P("model", None)
+
+
+def test_batch_multi_pod():
+    ps = pspec_for((256, 4096), ("batch", "seq"), POD)
+    assert ps == P(("pod", "data"), None)
+
+
+def test_batch_fallback_single_axis():
+    # batch 8 doesn't divide pod*data=32 but divides data? no (16) ->
+    # falls to replicated via the chain
+    ps = pspec_for((8, 128), ("batch", "seq"), POD)
+    assert ps == P(None, None)
+
+
+def test_decode_cache_sequence_sharding():
+    # (G, B, S, K, hd) decode cache: kv_seq -> model
+    ps = pspec_for((64, 128, 32768, 8, 128),
+                   ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), POD)
+    assert ps == P(None, ("pod", "data"), "model", None, None)
+
+
+def test_rwkv_projection_sharding():
+    ps = pspec_for((4096, 4096), ("embed", "heads_flat"), SINGLE)
+    assert ps == P("data", "model")

@@ -1,0 +1,189 @@
+"""VersionedStore invariants (paper §III.B-C), incl. the central property:
+get_version(T) == brute-force replay of all updates with ts <= T."""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.store import (FieldSchema, VersionedStore, KIND_DELETED,
+                              KIND_NEW, KIND_UPDATED)
+
+
+def mk_table(rng, n):
+    return {"a": rng.integers(0, 50, (n, 4)).astype(np.int32),
+            "b": rng.normal(size=(n, 2)).astype(np.float32)}
+
+
+def brute_force_state(updates, t):
+    """Replay updates (ts, {key: row}) -> {key: row} live at t."""
+    state, alive = {}, {}
+    for ts, rows, full in updates:
+        if ts > t:
+            break
+        seen = set(rows)
+        for k, v in rows.items():
+            state[k] = v
+            alive[k] = True
+        if full:
+            for k in list(alive):
+                if k not in seen:
+                    alive[k] = False
+    return {k: state[k] for k, v in alive.items() if v}
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 5))
+def test_get_version_equals_replay(seed, n_versions):
+    rng = np.random.default_rng(seed)
+    st_ = VersionedStore("t", [FieldSchema("a", 4, "int32"),
+                               FieldSchema("b", 2, "float32")])
+    pool = [f"K{i}" for i in range(30)]
+    updates = []
+    for v in range(n_versions):
+        ts = (v + 1) * 10
+        keys = sorted(rng.choice(pool, size=rng.integers(5, 25), replace=False))
+        tbl = mk_table(rng, len(keys))
+        st_.update(ts, keys, tbl)
+        updates.append((ts, {k: (tbl["a"][i], tbl["b"][i])
+                             for i, k in enumerate(keys)}, True))
+    for t in [5, 10, 15, 25, n_versions * 10, n_versions * 10 + 7]:
+        want = brute_force_state(updates, t)
+        got = st_.get_version(t)
+        assert sorted(k.decode() for k in got.keys) == sorted(want)
+        for i, k in enumerate(got.keys):
+            wa, wb = want[k.decode()]
+            assert np.array_equal(got.values["a"][i], wa)
+            assert np.array_equal(got.values["b"][i], wb)
+
+
+def test_increment_plus_base_equals_version(rng):
+    """Applying get_increment(t0, t1) onto version(t0) yields version(t1)."""
+    st_ = VersionedStore("t", [FieldSchema("a", 3, "int32")])
+    keys1 = [f"k{i}" for i in range(20)]
+    t1 = {"a": rng.integers(0, 9, (20, 3)).astype(np.int32)}
+    st_.update(10, keys1, t1)
+    keys2 = keys1[:15] + ["n1", "n2"]
+    t2 = {"a": np.concatenate([t1["a"][:15], rng.integers(0, 9, (2, 3)).astype(np.int32)])}
+    t2["a"][3] += 1
+    t2["a"][7] += 2
+    st_.update(20, keys2, t2)
+
+    base = st_.get_version(10)
+    inc = st_.get_increment(10, 20)
+    merged = {k.decode(): v for k, v in zip(base.keys, base.values["a"])}
+    for k, kind, v in zip(inc.keys, inc.kind, inc.values["a"]):
+        if kind == KIND_DELETED:
+            merged.pop(k.decode())
+        else:
+            merged[k.decode()] = v
+    v2 = st_.get_version(20)
+    assert sorted(merged) == sorted(k.decode() for k in v2.keys)
+    for i, k in enumerate(v2.keys):
+        assert np.array_equal(merged[k.decode()], v2.values["a"][i])
+
+
+def test_significant_fields_filter(rng):
+    st_ = VersionedStore("t", [FieldSchema("seq", 4, "int32"),
+                               FieldSchema("annot", 4, "int32")])
+    keys = [f"k{i}" for i in range(10)]
+    tbl = mk = {"seq": rng.integers(0, 9, (10, 4)).astype(np.int32),
+                "annot": rng.integers(0, 9, (10, 4)).astype(np.int32)}
+    st_.update(1, keys, tbl)
+    tbl2 = {"seq": tbl["seq"].copy(), "annot": tbl["annot"] + 1}
+    tbl2["seq"][:2] += 5
+    st_.update(2, keys, tbl2)
+    inc_seq = st_.get_increment(1, 2, significant_fields=["seq"])
+    assert len(inc_seq) == 2            # annotation churn ignored (BLAST case)
+    inc_all = st_.get_increment(1, 2)
+    assert len(inc_all) == 10
+
+
+def test_delete_and_tombstones(rng):
+    st_ = VersionedStore("t", [FieldSchema("a", 2, "int32")])
+    st_.update(1, ["x", "y", "z"], {"a": np.ones((3, 2), np.int32)})
+    st_.delete(2, ["y"])
+    v = st_.get_version(2)
+    assert sorted(k.decode() for k in v.keys) == ["x", "z"]
+    v1 = st_.get_version(1)
+    assert len(v1) == 3                 # history preserved
+    inc = st_.get_increment(1, 2)
+    kinds = dict(zip([k.decode() for k in inc.keys], inc.kind))
+    assert kinds == {"y": KIND_DELETED}
+
+
+def test_schema_evolution(rng):
+    st_ = VersionedStore("t", [FieldSchema("a", 2, "int32")])
+    st_.update(1, ["x"], {"a": np.ones((1, 2), np.int32)})
+    st_.update(2, ["x"], {"a": np.ones((1, 2), np.int32),
+                          "new_field": np.full((1, 3), 7, np.int32)})
+    v = st_.get_version(2)
+    assert np.array_equal(v.values["new_field"], [[7, 7, 7]])
+    v1 = st_.get_version(1)
+    assert np.array_equal(v1.values["new_field"], [[0, 0, 0]])  # absent -> zeros
+
+
+def test_save_load_roundtrip(rng):
+    st_ = VersionedStore("t", [FieldSchema("a", 4, "int32"),
+                               FieldSchema("b", 2, "float32")])
+    for v in range(3):
+        n = 10 + v
+        st_.update((v + 1) * 10, [f"k{i}" for i in range(n)], mk_table(rng, n))
+    with tempfile.TemporaryDirectory() as d:
+        stats = st_.save(d)
+        assert stats["packed_bytes"] <= stats["raw_bytes"]
+        st2 = VersionedStore.load(d)
+        for t in (10, 20, 30):
+            a, b = st_.get_version(t), st2.get_version(t)
+            assert a.keys == b.keys
+            for f in ("a", "b"):
+                assert np.array_equal(a.values[f], b.values[f])
+        # loaded store accepts further updates
+        st2.update(40, ["k0"], {"a": np.zeros((1, 4), np.int32),
+                                "b": np.zeros((1, 2), np.float32)},
+                   full_release=False)
+        assert len(st2.get_version(40)) == len(st_.get_version(30))
+
+
+def test_patch_with_present_keys(rng):
+    st_ = VersionedStore("t", [FieldSchema("a", 2, "int32")])
+    st_.update(1, ["x", "y", "z"], {"a": np.ones((3, 2), np.int32)})
+    # patch: only x changed, y still present, z gone
+    st_.update(2, ["x"], {"a": np.full((1, 2), 9, np.int32)},
+               full_release=False, present_keys=[b"x", b"y"])
+    v = st_.get_version(2)
+    assert sorted(k.decode() for k in v.keys) == ["x", "y"]
+
+
+def test_key_filter_taxon_use_case(rng):
+    st_ = VersionedStore("t", [FieldSchema("a", 2, "int32")])
+    st_.update(1, ["tax9606|p1", "tax9606|p2", "tax562|p3"],
+               {"a": np.ones((3, 2), np.int32)})
+    v = st_.get_version(1, key_filter=r"^tax9606")
+    assert len(v) == 2
+
+
+def test_compaction_preserves_recent_versions(rng):
+    st_ = VersionedStore("t", [FieldSchema("a", 3, "int32")])
+    keys = [f"k{i}" for i in range(25)]
+    tables = {}
+    for v in range(1, 6):
+        tbl = {"a": rng.integers(0, 9, (25, 3)).astype(np.int32)}
+        st_.update(v * 10, keys, tbl)
+        tables[v * 10] = tbl
+    # also delete a key mid-history
+    st_.delete(55, ["k3"])
+    before = {t: st_.get_version(t) for t in (30, 40, 50, 55)}
+    stats = st_.compact(30)
+    assert stats["cells_dropped"] > 0
+    for t in (30, 40, 50, 55):
+        after = st_.get_version(t)
+        assert after.keys == before[t].keys, t
+        assert np.array_equal(after.values["a"], before[t].values["a"]), t
+    # increments across the compaction point still work for t0 >= before_ts
+    inc = st_.get_increment(30, 50)
+    assert len(inc) > 0
+    # store remains updatable post-compaction (k3 not touched: stays deleted)
+    st_.update(60, keys[5:10], {"a": np.zeros((5, 3), np.int32)},
+               full_release=False)
+    assert len(st_.get_version(60)) == 24  # k3 still deleted

@@ -1,0 +1,138 @@
+"""End-to-end system behaviour: the paper's workflow lifecycle on top of
+the full stack (store -> plugins -> incremental search -> versioned
+checkpoints), mirroring the GeStore evaluation narrative."""
+import tempfile
+
+import numpy as np
+import jax
+import pytest
+
+import repro.core as core
+from repro.configs.base import RunConfig, get_smoke_config
+from repro.core.parsers import FastaParser, UniProtParser
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.data.versioned_dataset import VersionedCorpus
+from repro.train.train_loop import Trainer, TrainerConfig
+
+
+def _fasta(n, mut=(), seed=5):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        seq = "".join(rng.choice(list("ACDEFGHIKLMNPQRSTVWY"), 28))
+        if i in mut:
+            seq = seq[:4] + "YYYY" + seq[8:]
+        out.append(f">P{i:04d} protein {i}\n{seq}\n")
+    return "".join(out)
+
+
+def test_full_gestore_lifecycle():
+    """add release -> update release -> full gen -> increment gen -> cached;
+    operation set of paper Tables I-II."""
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=64, desc_width=16))
+    reg.register_tool(core.ToolPlugin(
+        "blastp",
+        core.FileGenerator(parser="fasta",
+                           output_fields=["sequence", "length", "desc"],
+                           significant_fields=["sequence", "length"]),
+        merger=core.BlastEvalueMerger()))
+    with tempfile.TemporaryDirectory() as root:
+        gs = core.GeStore(root, reg)
+        i1 = gs.add_release("up", 100, _fasta(60), parser_name="fasta")
+        assert i1.n_new == 60
+        i2 = gs.add_release("up", 200, _fasta(66, mut={1, 2, 3}),
+                            parser_name="fasta")
+        assert i2.n_new == 6 and i2.n_updated == 3
+        full = gs.generate_files("blastp", "up", t_version=200)
+        inc = gs.generate_files("blastp", "up", t_version=200, t_last=100)
+        assert full.n_entries == 66 and inc.n_entries == 9
+        cached = gs.generate_files("blastp", "up", t_version=200)
+        assert cached.mode == "cached"
+        # updates table recorded both releases
+        ups = gs.tables.updates_for("up")
+        assert [u.ts for u in ups] == [100, 200]
+
+
+def test_incremental_reanalysis_speedup_model():
+    """The Table-IV story: incremental work / full work ~= churn rate."""
+    rng = np.random.default_rng(0)
+    store = core.VersionedStore("c", [core.FieldSchema("sequence", 16, "int32")])
+    n = 400
+    store.update(1, [f"d{i}" for i in range(n)],
+                 {"sequence": rng.integers(0, 20, (n, 16)).astype(np.int32)})
+    view = store.get_version(1)
+    tbl = view.values["sequence"].copy()
+    tbl[:12] = rng.integers(0, 20, (12, 16))     # 3% churn
+    store.update(2, [k.decode() for k in view.keys], {"sequence": tbl})
+
+    proj = rng.normal(size=(16, 8)).astype(np.float32)
+    enc = lambda t: (t.astype(np.float32) @ proj) / 4.0
+    db = core.EmbeddingSearchDB(store, enc, seg_size=16)
+    db.refresh(1)
+    full_cost = db.n_embedded_total
+    q = rng.integers(0, 20, (4, 16)).astype(np.int32)
+    r1 = db.query([b"a", b"b", b"c", b"d"], q, ts=1, k=5)
+    r2 = db.incremental_query(r1, [b"a", b"b", b"c", b"d"], q, t_last=1, ts=2,
+                              k=5)
+    inc_cost = db.n_embedded_total - full_cost
+    speedup = full_cost / max(inc_cost, 1)
+    assert speedup >= 13, speedup                 # paper: 13x for 1-month delta
+    # and results are exact
+    db2 = core.EmbeddingSearchDB(store, enc, seg_size=16)
+    db2.refresh(2)
+    rf = db2.query([b"a", b"b", b"c", b"d"], q, ts=2, k=5)
+    assert np.array_equal(r2.topk_idx, rf.topk_idx)
+
+
+def test_versioned_training_pipeline():
+    """Training consumes a pinned corpus version; checkpoint versions are
+    delta-compressed releases; restart reproduces the run."""
+    corpus = VersionedCorpus()
+    docs = {f"d{i}": f"sample training text number {i} " * 6 for i in range(30)}
+    corpus.add_release(1, docs)
+    cfg = get_smoke_config("olmo-1b")
+    toks = corpus.token_stream(1) % cfg.vocab
+    pipe = TokenPipeline(toks, DataConfig(seq_len=24, global_batch=4, seed=1))
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(cfg, RunConfig(attn_impl="xla", learning_rate=1e-3),
+                     TrainerConfig(total_steps=8, warmup_steps=1,
+                                   ckpt_every=4, ckpt_dir=d))
+        tr.run_loop(iter(pipe))
+        assert tr.ckpt.stats()["versions"] == 2
+        # crash-restart from step 4
+        tr2 = Trainer(cfg, RunConfig(attn_impl="xla", learning_rate=1e-3),
+                      TrainerConfig(total_steps=8, warmup_steps=1,
+                                    ckpt_every=0, ckpt_dir=d))
+        tr2.state["params"] = tr.ckpt.restore(4, like=tr2.state["params"])
+        flat = jax.tree_util.tree_leaves(tr2.state["params"])
+        assert all(np.isfinite(np.asarray(x)).all() for x in flat)
+
+
+def test_uniprot_blast_significance_end_to_end():
+    """Annotation-only release churn must produce an EMPTY BLAST increment
+    (the paper's central motivating example)."""
+    up_v1 = """ID   A_TEST   Reviewed;   10 AA.
+AC   A0001;
+DE   RecName: Full=Old name;
+OX   NCBI_TaxID=9606;
+SQ   SEQUENCE   10 AA;  1111 MW;  AAAA CRC64;
+     MKTAYIAKQR
+//
+"""
+    up_v2 = up_v1.replace("Old name", "Shiny new annotation")
+    reg = core.PluginRegistry()
+    reg.register_parser(UniProtParser(seq_width=32))
+    reg.register_tool(core.ToolPlugin(
+        "blastp",
+        core.FileGenerator(parser="uniprot_dat",
+                           output_fields=["sequence", "length", "annotation",
+                                          "taxid"],
+                           significant_fields=["sequence", "length"])))
+    with tempfile.TemporaryDirectory() as root:
+        gs = core.GeStore(root, reg)
+        gs.add_release("uniprot", 1, up_v1, parser_name="uniprot_dat")
+        info = gs.add_release("uniprot", 2, up_v2, parser_name="uniprot_dat")
+        assert info.n_updated == 1                    # annotation cell written
+        inc = gs.generate_files("blastp", "uniprot", t_version=2, t_last=1)
+        assert inc.n_entries == 0                     # but BLAST sees nothing
