@@ -1,31 +1,45 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Set BENCH_N / BENCH_APP_N to scale
-(defaults sized for a single CPU core; the operations are row-parallel, see
-DESIGN.md §8 for the pod-scale throughput argument).
+Prints ``name,us_per_call,derived`` CSV and writes the same rows to
+``BENCH_results.json`` (the CI artifact). Set BENCH_N / BENCH_APP_N /
+BENCH_BATCH_N to scale (defaults sized for a single CPU core; the
+operations are row-parallel, see DESIGN.md §8 for the pod-scale throughput
+argument).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def main() -> None:
-    sys.path.insert(0, "src")
+    # robust to both `python benchmarks/run.py` and `python -m benchmarks.run`
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
     from benchmarks import (fig1_growth, roofline_table, table1_lifecycle,
                             table2_incremental, table3_split,
-                            table4_application)
+                            table4_application, table5_batched)
     print("name,us_per_call,derived")
-    failures = 0
+    results = []
+    failures = []
     for mod in (table1_lifecycle, table2_incremental, table3_split,
-                table4_application, fig1_growth, roofline_table):
+                table4_application, table5_batched, fig1_growth,
+                roofline_table):
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.3f},{derived}")
+                results.append({"name": name, "us_per_call": us,
+                                "derived": derived})
         except Exception:
-            failures += 1
+            failures.append(mod.__name__)
             print(f"{mod.__name__},NaN,FAILED", file=sys.stderr)
             traceback.print_exc()
+    with open(os.path.join(_ROOT, "BENCH_results.json"), "w") as f:
+        json.dump({"results": results, "failures": failures}, f, indent=2)
     if failures:
         sys.exit(1)
 

@@ -5,13 +5,22 @@ The workflow-manager-facing interface is two calls (paper: `generateFiles` /
 (full version or increment, cache-aware); after running it, merge the
 partial output into the previous result. The tool itself is UNMODIFIED — it
 just reads and writes files.
+
+`generate_files_batch` is the multi-version entry point: requests are
+grouped per store and materialized through the store's fused-superlog
+batched scan (store.get_versions / get_increments), so N concurrent
+version materializations cost one scan per store-group instead of N x F
+kernel launches. `generate_files` is its single-request wrapper.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import re
 import time
-from typing import Callable
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
 
 from .cache import VersionCache, descriptor
 from .plugins import PluginRegistry, ToolPlugin
@@ -27,6 +36,25 @@ class GeneratedInput:
     t1: int
     n_entries: int
     context: dict             # merge context (db sizes, deleted/updated keys)
+
+
+def _live_filtered(inc: Increment, key_filter: str | None) -> Increment:
+    """Drop tombstoned entries (they are merge context, not file content),
+    then apply the entry-selection regex."""
+    live = inc.kind != KIND_DELETED
+    sub = Increment(inc.t0, inc.t1,
+                    [k for k, m in zip(inc.keys, live) if m],
+                    inc.row_idx[live], inc.kind[live],
+                    {f: v[live] for f, v in inc.values.items()})
+    if key_filter is not None:
+        pat = re.compile(key_filter.encode())
+        m = [bool(pat.search(k)) for k in sub.keys]
+        m = np.asarray(m, bool) if m else np.zeros(0, bool)
+        sub = Increment(sub.t0, sub.t1,
+                        [k for k, mm in zip(sub.keys, m) if mm],
+                        sub.row_idx[m], sub.kind[m],
+                        {f: v[m] for f, v in sub.values.items()})
+    return sub
 
 
 class GeStore:
@@ -62,55 +90,117 @@ class GeStore:
                        key_filter: str | None = None,
                        run_id: str = "") -> GeneratedInput:
         """paper `generateFiles`: full version if t_last is None, else the
-        increment (t_last, t_version]."""
-        plugin = self.registry.tools[tool]
-        parser = self.registry.parsers[plugin.generator.parser]
-        store = self.stores[store_name]
-        mode = "full" if t_last is None else "increment"
-        desc = descriptor(store_name, -1 if t_last is None else t_last,
-                          t_version, filter_expr=key_filter or "",
-                          plugin=tool, params=plugin.params)
-        context = self._merge_context(store, plugin, t_last, t_version)
+        increment (t_last, t_version]. Thin wrapper over the batched path."""
+        return self.generate_files_batch([
+            {"tool": tool, "store": store_name, "t_version": t_version,
+             "t_last": t_last, "key_filter": key_filter, "run_id": run_id},
+        ])[0]
 
-        cached = self.cache.get(desc)
-        if cached is not None:
-            n = sum(1 for _ in open(cached)) if os.path.exists(cached) else 0
-            return GeneratedInput(cached, "cached", t_last or -1, t_version,
-                                  n, context)
+    def generate_files_batch(self, requests: Sequence[Mapping]) -> list[GeneratedInput]:
+        """Batched `generateFiles`. Each request is a mapping with keys
+        ``tool``, ``store``, ``t_version`` and optional ``t_last`` /
+        ``key_filter`` / ``run_id``. Returns GeneratedInputs aligned with
+        the input order. All increments of a store group into ONE
+        get_increments call; all uncached full versions group into ONE
+        get_versions call per (store, fields, filter) — each a single
+        batched superlog scan."""
+        reqs = []
+        cached0: list[str | None] = []
+        for raw in requests:
+            r = dict(raw)
+            plugin = self.registry.tools[r["tool"]]
+            parser = self.registry.parsers[plugin.generator.parser]
+            store = self.stores[r["store"]]
+            t_last = r.get("t_last")
+            desc = descriptor(r["store"], -1 if t_last is None else t_last,
+                              r["t_version"], filter_expr=r.get("key_filter") or "",
+                              plugin=r["tool"], params=plugin.params)
+            reqs.append((r, plugin, parser, store, desc))
+            cached0.append(self.cache.get(desc))
 
-        if mode == "full":
-            view = store.get_version(t_version,
-                                     fields=list(plugin.generator.output_fields),
-                                     key_filter=key_filter)
-            text = parser.format_view(view)
-            n_entries = len(view)
-        else:
-            inc = store.get_increment(
-                t_last, t_version,
-                significant_fields=list(plugin.generator.significant_fields),
-                fields=list(plugin.generator.output_fields))
-            live = inc.kind != KIND_DELETED
-            sub = Increment(inc.t0, inc.t1,
-                            [k for k, m in zip(inc.keys, live) if m],
-                            inc.row_idx[live], inc.kind[live],
-                            {f: v[live] for f, v in inc.values.items()})
-            if key_filter is not None:
-                import re
-                pat = re.compile(key_filter.encode())
-                m = [bool(pat.search(k)) for k in sub.keys]
-                import numpy as np
-                m = np.asarray(m, bool) if m else np.zeros(0, bool)
-                sub = Increment(sub.t0, sub.t1,
-                                [k for k, mm in zip(sub.keys, m) if mm],
-                                sub.row_idx[m], sub.kind[m],
-                                {f: v[m] for f, v in sub.values.items()})
-            text = parser.format_view(sub)
-            n_entries = len(sub)
+        # -- increments: always materialized (the merge context needs the
+        # changed-key sets even when the generated file is cached), one
+        # batched scan per (store, significant, output-fields) group.
+        # Cache hits only need keys/kinds, so they group with fields=().
+        inc_groups: dict[tuple, list[int]] = {}
+        for i, (r, plugin, _, _, _) in enumerate(reqs):
+            if r.get("t_last") is not None:
+                out = () if cached0[i] is not None else tuple(
+                    plugin.generator.output_fields)
+                key = (r["store"], tuple(plugin.generator.significant_fields),
+                       out)
+                inc_groups.setdefault(key, []).append(i)
+        incs: dict[int, Increment] = {}
+        for (sname, sig, out_fields), idxs in inc_groups.items():
+            store = self.stores[sname]
+            pairs = [(reqs[i][0]["t_last"], reqs[i][0]["t_version"])
+                     for i in idxs]
+            uniq = list(dict.fromkeys(pairs))
+            got = dict(zip(uniq, store.get_increments(
+                uniq, significant_fields=list(sig), fields=list(out_fields))))
+            for i, p in zip(idxs, pairs):
+                incs[i] = got[p]
 
-        path = self.cache.put(desc, lambda p: open(p, "w").write(text),
-                              plugin=tool, suffix=".txt")
-        return GeneratedInput(path, mode, t_last or -1, t_version, n_entries,
-                              context)
+        # -- db-size context (e-value style corrections): batched per store.
+        size_ts: dict[str, set] = {}
+        for i in incs:
+            r, _, _, store, _ = reqs[i]
+            if "length" in store.fields:
+                size_ts.setdefault(r["store"], set()).update(
+                    (r["t_last"], r["t_version"]))
+        sizes: dict[tuple[str, int], int] = {}
+        for sname, tss in size_ts.items():
+            store, tss = self.stores[sname], sorted(tss)
+            for t, view in zip(tss, store.get_versions(tss, fields=["length"])):
+                # keyed by store.name: _merge_context reads it back that way
+                sizes[(store.name, t)] = int(view.values["length"].sum())
+
+        # -- cache check; collect the uncached full versions per group.
+        results: list[GeneratedInput | None] = [None] * len(reqs)
+        contexts: list[dict] = [None] * len(reqs)
+        full_groups: dict[tuple, list[int]] = {}
+        for i, (r, plugin, parser, store, desc) in enumerate(reqs):
+            contexts[i] = self._merge_context(store, plugin, r.get("t_last"),
+                                              r["t_version"], inc=incs.get(i),
+                                              sizes=sizes)
+            cached = cached0[i]
+            if cached is not None:
+                results[i] = _cached_result(cached, r, contexts[i])
+            elif r.get("t_last") is None:
+                key = (r["store"], tuple(plugin.generator.output_fields),
+                       r.get("key_filter"))
+                full_groups.setdefault(key, []).append(i)
+
+        # -- batched full-version materialization.
+        views: dict[int, object] = {}
+        for (sname, out_fields, key_filter), idxs in full_groups.items():
+            store = self.stores[sname]
+            tss = [reqs[i][0]["t_version"] for i in idxs]
+            uniq = list(dict.fromkeys(tss))
+            got = dict(zip(uniq, store.get_versions(
+                uniq, fields=list(out_fields), key_filter=key_filter)))
+            for i, t in zip(idxs, tss):
+                views[i] = got[t]
+
+        # -- format + cache-put everything still pending.
+        for i, (r, plugin, parser, store, desc) in enumerate(reqs):
+            if results[i] is not None:
+                continue
+            cached = self.cache.get(desc)
+            if cached is not None:  # a duplicate earlier in this batch wrote it
+                results[i] = _cached_result(cached, r, contexts[i])
+                continue
+            if r.get("t_last") is None:
+                view = views[i]
+                text, n_entries, mode = parser.format_view(view), len(view), "full"
+            else:
+                sub = _live_filtered(incs[i], r.get("key_filter"))
+                text, n_entries, mode = parser.format_view(sub), len(sub), "increment"
+            path = self.cache.put(desc, lambda p, text=text: _write_text(p, text),
+                                  plugin=r["tool"], suffix=".txt")
+            results[i] = GeneratedInput(path, mode, _t0(r), r["t_version"],
+                                        n_entries, contexts[i])
+        return results
 
     def merge_files(self, tool: str, previous: str, partial: str, *,
                     context: dict) -> str:
@@ -145,14 +235,17 @@ class GeStore:
 
     # -- helpers ---------------------------------------------------------------
     def _merge_context(self, store: VersionedStore, plugin: ToolPlugin,
-                       t_last: int | None, t_version: int) -> dict:
+                       t_last: int | None, t_version: int, *,
+                       inc: Increment | None,
+                       sizes: Mapping[tuple[str, int], int] | None = None) -> dict:
         ctx: dict = dict(plugin.params)   # tool knobs (e.g. max_hits_per_query)
         if t_last is None:
             return ctx
-        inc = store.get_increment(
-            t_last, t_version,
-            significant_fields=list(plugin.generator.significant_fields),
-            fields=[])
+        if inc is None:  # direct callers outside the batch path
+            inc = store.get_increment(
+                t_last, t_version,
+                significant_fields=list(plugin.generator.significant_fields),
+                fields=[])
         ctx["deleted_keys"] = [k for k, kd in zip(inc.keys, inc.kind)
                                if kd == KIND_DELETED]
         ctx["updated_keys"] = [k for k, kd in zip(inc.keys, inc.kind)
@@ -161,8 +254,28 @@ class GeStore:
                            if kd == KIND_NEW]
         # database-size context for e-value style corrections
         if "length" in store.fields:
-            old = store.get_version(t_last, fields=["length"])
-            new = store.get_version(t_version, fields=["length"])
-            ctx["db_size_old"] = int(old.values["length"].sum())
-            ctx["db_size_new"] = int(new.values["length"].sum())
+            sizes = sizes or {}
+            for label, t in (("db_size_old", t_last), ("db_size_new", t_version)):
+                val = sizes.get((store.name, t))
+                if val is None:
+                    val = int(store.get_version(t, fields=["length"])
+                              .values["length"].sum())
+                ctx[label] = val
         return ctx
+
+
+def _t0(r: Mapping) -> int:
+    """Increment start for a request; full versions report -1 (a t_last of
+    0 is a valid timestamp and must not collapse to -1)."""
+    return -1 if r.get("t_last") is None else r["t_last"]
+
+
+def _cached_result(path: str, r: Mapping, context: dict) -> GeneratedInput:
+    with open(path) as f:
+        n = sum(1 for _ in f)
+    return GeneratedInput(path, "cached", _t0(r), r["t_version"], n, context)
+
+
+def _write_text(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)

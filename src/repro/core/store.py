@@ -167,6 +167,121 @@ class _CellLog:
         return (cum[ptr[1:]] - cum[ptr[:-1]]).astype(np.int32)
 
 
+@dataclasses.dataclass
+class _SuperLogField:
+    """One log's slice of the fused superlog."""
+    offset: int                 # first cell of this log in the fused ts array
+    b_off: int                  # first entry of this log in the fused boundary array
+    n_cells: int
+    width: int
+    dtype: np.dtype
+    ptr: np.ndarray             # (N+1,) log-local CSR offsets (host)
+    vals_host: np.ndarray | None  # (C_f, W) consolidated cell values
+    _vals_dev: object = None
+
+    def vals_dev(self):
+        """Device copy of the cell values, uploaded on first gather — a
+        narrow-field query must not pay for the store's wide columns."""
+        if self._vals_dev is None and self.vals_host is not None:
+            self._vals_dev = jnp.asarray(self.vals_host)
+        return self._vals_dev
+
+
+class _SuperLog:
+    """Consolidated device-resident CSR over every cell log of a store.
+
+    All field logs plus the EXISTS log are fused into ONE device timestamp
+    array with per-field cell offsets, so materializing Q versions costs a
+    single batched masked-cumsum launch over the fused array
+    (kernels/batched_select.py) instead of Q*F per-field launches that each
+    re-upload their log from host. Per-field boundary gathers and value
+    gathers are O(boundaries) / O(selected) afterthoughts.
+
+    A snapshot is immutable; ``VersionedStore`` rebuilds it lazily whenever
+    the log epoch moves (any append/compact/load).
+    """
+
+    EXISTS = "__exists__"
+
+    def __init__(self, store: "VersionedStore"):
+        self.n_rows = store.n_rows
+        self.epoch = store.log_epoch
+        logs: dict[str, _CellLog] = {n: c.log for n, c in store.fields.items()}
+        logs[self.EXISTS] = store.exists_log
+        ts_parts: list[np.ndarray] = []
+        bnd_parts: list[np.ndarray] = []
+        self.fields: dict[str, _SuperLogField] = {}
+        off = b_off = 0
+        for name, log in logs.items():
+            vals, tss, ptr = log.csr(self.n_rows)
+            ptr = np.asarray(ptr)
+            self.fields[name] = _SuperLogField(
+                offset=off, b_off=b_off, n_cells=len(tss), width=log.width,
+                dtype=log.dtype, ptr=ptr,
+                vals_host=vals if len(tss) else None)
+            ts_parts.append(tss.astype(np.int32))
+            bnd_parts.append(off + ptr.astype(np.int64))
+            off += len(tss)
+            b_off += len(ptr)
+        self.n_cells = off
+        self.ts = jnp.asarray(np.concatenate(ts_parts)) if off else None
+        # every field's CSR boundaries in fused-cell coordinates: the scan
+        # result is only ever read at these positions
+        self.boundaries = np.concatenate(bnd_parts)
+
+    # -- the one batched scan -------------------------------------------------
+    def boundary_cums(self, ts_list: Sequence[Timestamp]) -> np.ndarray:
+        """(Q, n_boundaries) cumsum of (ts <= t_q) AT every field's CSR
+        boundaries: ONE batched kernel launch for all queries and all
+        fields, with only the boundary columns crossing device->host
+        (O(Q x F x N), not O(Q x total_cells))."""
+        qs = np.asarray([_clamp_ts(t) for t in ts_list], np.int32)
+        out = np.zeros((len(qs), len(self.boundaries)), np.int32)
+        if self.n_cells and len(qs):
+            cum = kops.batched_masked_cumsum(self.ts, jnp.asarray(qs))
+            at = jnp.take(cum, jnp.asarray(np.maximum(self.boundaries - 1, 0)),
+                          axis=1)
+            at = jnp.where(jnp.asarray(self.boundaries == 0)[None, :], 0, at)
+            out = np.asarray(at)
+        return out
+
+    # -- per-field boundary math ----------------------------------------------
+    def counts(self, name: str, bcum: np.ndarray) -> np.ndarray:
+        """(Q, N) per-row count of cells with ts <= t_q for one field."""
+        f = self.fields[name]
+        b = bcum[:, f.b_off: f.b_off + len(f.ptr)]
+        return b[:, 1:] - b[:, :-1]
+
+    def exists_matrix(self, bcum: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(alive (Q, N), ever (Q, N)) from the EXISTS log."""
+        f = self.fields[self.EXISTS]
+        cnt = self.counts(self.EXISTS, bcum)
+        ever = cnt > 0
+        if f.vals_host is None:
+            return np.zeros_like(ever), ever
+        idx = np.clip(f.ptr[None, :-1] + cnt - 1, 0, f.n_cells - 1)
+        v = np.asarray(jnp.take(f.vals_dev()[:, 0], jnp.asarray(idx), axis=0))
+        return (v > 0) & ever, ever
+
+    def gather_many(self, name: str, cnts: "Sequence[np.ndarray]",
+                    sels: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Per-query row selections fused into ONE device gather per field:
+        cnts[q] the (N,) per-row counts and sels[q] the selected rows of
+        query q. Rows with no cell at the query time come back zeroed (same
+        semantics as _CellLog.select_at)."""
+        f = self.fields[name]
+        lens = [len(s) for s in sels]
+        if f.vals_host is None or sum(lens) == 0:
+            return [np.zeros((l, f.width), f.dtype) for l in lens]
+        cat_cnt = np.concatenate([c[s] for c, s in zip(cnts, sels)])
+        cat_rows = np.concatenate(sels)
+        idx = np.clip(f.ptr[cat_rows] + cat_cnt - 1, 0, f.n_cells - 1)
+        out = np.array(jnp.take(f.vals_dev(), jnp.asarray(idx), axis=0))
+        out[cat_cnt <= 0] = 0
+        offs = np.cumsum([0] + lens)
+        return [out[offs[i]: offs[i + 1]] for i in range(len(lens))]
+
+
 class _FieldColumn:
     """Head state + cell log for one field."""
 
@@ -201,8 +316,32 @@ class VersionedStore:
         self.exists_log = _CellLog(1, np.dtype(np.int8))
         self._exists_head = np.zeros(self.capacity, bool)
         self.versions: list[VersionInfo] = []
+        self._log_epoch = 0
+        self._superlog: _SuperLog | None = None
         for fs in schema:
             self.add_field(fs)
+
+    # -- fused superlog lifecycle -------------------------------------------
+    @property
+    def log_epoch(self) -> int:
+        """Monotone counter bumped on every log mutation; (store, log_epoch)
+        keys any externally cached materialization plan."""
+        return self._log_epoch
+
+    def _invalidate_log(self) -> None:
+        self._log_epoch += 1
+        self._superlog = None
+
+    def superlog(self) -> _SuperLog:
+        """Device-resident consolidated CSR, rebuilt lazily on append."""
+        if not self._superlog_fresh():
+            self._superlog = _SuperLog(self)
+        return self._superlog
+
+    def _superlog_fresh(self) -> bool:
+        sl = self._superlog
+        return (sl is not None and sl.epoch == self._log_epoch
+                and sl.n_rows == self.n_rows)
 
     # -- schema evolution (HBase column flexibility, §III.B) ----------------
     def add_field(self, fs: FieldSchema) -> None:
@@ -210,6 +349,7 @@ class VersionedStore:
             raise ValueError(f"field {fs.name} exists")
         self.schema[fs.name] = fs
         self.fields[fs.name] = _FieldColumn(fs, self.capacity)
+        self._invalidate_log()
 
     # -- row allocation ------------------------------------------------------
     def _rows_for_keys(self, keys: Sequence[bytes], create: bool) -> np.ndarray:
@@ -311,6 +451,7 @@ class VersionedStore:
         info = VersionInfo(ts=ts, label=label or str(ts), n_entries=len(keys),
                            n_new=n_new, n_updated=n_upd, n_deleted=n_deleted)
         self.versions.append(info)
+        self._invalidate_log()
         return info
 
     def delete(self, ts: Timestamp, keys: Sequence[bytes], *, label: str = "") -> VersionInfo:
@@ -320,6 +461,7 @@ class VersionedStore:
         self._exists_head[rows] = False
         info = VersionInfo(ts, label or f"delete@{ts}", len(keys), 0, 0, len(keys))
         self.versions.append(info)
+        self._invalidate_log()
         return info
 
     # -- exists at a point in time -------------------------------------------
@@ -327,26 +469,77 @@ class VersionedStore:
         vals, found = self.exists_log.select_at(self.n_rows, t)
         return (vals[:, 0] > 0) & found
 
-    # -- get_version (§III.C) --------------------------------------------------
+    def _filter_sel(self, sel: np.ndarray,
+                    key_filter: str | Callable[[bytes], bool] | None) -> np.ndarray:
+        if key_filter is None or len(sel) == 0:
+            return sel
+        if isinstance(key_filter, (str, bytes)):
+            pat = re.compile(key_filter.encode()
+                             if isinstance(key_filter, str) else key_filter)
+            fmask = np.fromiter((pat.search(self.row_keys[r]) is not None
+                                 for r in sel), bool, count=len(sel))
+        else:
+            fmask = np.fromiter((key_filter(self.row_keys[r]) for r in sel),
+                                bool, count=len(sel))
+        return sel[fmask]
+
+    # -- get_version / get_versions (§III.C) ----------------------------------
+    def get_versions(self, ts_list: Sequence[Timestamp], *,
+                     fields: Sequence[str] | None = None,
+                     key_filter: str | Callable[[bytes], bool] | None = None,
+                     include_deleted: bool = False) -> list[VersionView]:
+        """Materialize MANY versions in one batched scan of the fused
+        superlog (not len(ts_list) x n_fields kernel launches). Duplicate
+        timestamps are materialized once and share the returned VersionView
+        object (concurrent users pin few distinct versions).
+
+        A single distinct timestamp against a cold superlog takes the
+        per-field select_at path instead: building the whole-store fused
+        log for one version of a few fields would upload every field's
+        cells (the update-then-read checkpoint/search workloads)."""
+        fields = list(fields) if fields is not None else list(self.fields)
+        ts_list = [int(t) for t in ts_list]
+        if not ts_list:
+            return []
+        uniq = list(dict.fromkeys(ts_list))
+        if len(uniq) == 1 and not self._superlog_fresh():
+            v = self._get_version_cold(uniq[0], fields, key_filter,
+                                       include_deleted)
+            return [v] * len(ts_list)
+        sl = self.superlog()
+        bcum = sl.boundary_cums(uniq)
+        alive, ever = sl.exists_matrix(bcum)
+        if include_deleted:
+            alive = ever
+        field_cnt = {name: sl.counts(name, bcum) for name in fields}
+        sels = [self._filter_sel(np.nonzero(alive[qi])[0], key_filter)
+                for qi in range(len(uniq))]
+        vals = {name: sl.gather_many(name, field_cnt[name], sels)
+                for name in fields}
+        by_t = {}
+        for qi, (t, sel) in enumerate(zip(uniq, sels)):
+            by_t[t] = VersionView(
+                ts=t, keys=[self.row_keys[r] for r in sel],
+                row_idx=sel.astype(np.int32),
+                values={name: vals[name][qi] for name in fields})
+        return [by_t[t] for t in ts_list]
+
     def get_version(self, t: Timestamp, *, fields: Sequence[str] | None = None,
                     key_filter: str | Callable[[bytes], bool] | None = None,
                     include_deleted: bool = False) -> VersionView:
-        fields = list(fields) if fields is not None else list(self.fields)
-        alive = self.exists_at(t)
-        if include_deleted:
-            ever = self.exists_log.changed_counts(self.n_rows, -1, t) > 0
-            alive = ever
-        sel = np.nonzero(alive)[0]
-        if key_filter is not None:
-            if isinstance(key_filter, (str, bytes)):
-                pat = re.compile(key_filter.encode()
-                                 if isinstance(key_filter, str) else key_filter)
-                fmask = np.fromiter((pat.search(self.row_keys[r]) is not None
-                                     for r in sel), bool, count=len(sel))
-            else:
-                fmask = np.fromiter((key_filter(self.row_keys[r]) for r in sel),
-                                    bool, count=len(sel))
-            sel = sel[fmask]
+        return self.get_versions([t], fields=fields, key_filter=key_filter,
+                                 include_deleted=include_deleted)[0]
+
+    def _get_version_cold(self, t: Timestamp, fields: list[str],
+                          key_filter, include_deleted: bool) -> VersionView:
+        """Single-version materialization over the requested fields' own
+        CSR logs (no fused-superlog build)."""
+        # "ever existed" = any EXISTS cell with ts <= t; the found flag
+        # matches _SuperLog.exists_matrix exactly (a windowed
+        # changed_counts(-1, t) would drop cells at negative ts)
+        vals, found = self.exists_log.select_at(self.n_rows, t)
+        alive = found if include_deleted else (vals[:, 0] > 0) & found
+        sel = self._filter_sel(np.nonzero(alive)[0], key_filter)
         values = {}
         for name in fields:
             vals, _found = self.fields[name].log.select_at(self.n_rows, t)
@@ -354,28 +547,90 @@ class VersionedStore:
         return VersionView(ts=t, keys=[self.row_keys[r] for r in sel],
                            row_idx=sel.astype(np.int32), values=values)
 
-    # -- get_increment (§III.C) -------------------------------------------------
-    def get_increment(self, t0: Timestamp, t1: Timestamp, *,
-                      significant_fields: Sequence[str] | None = None,
-                      fields: Sequence[str] | None = None) -> Increment:
-        """Entries whose significant fields changed in (t0, t1].
+    # -- get_increment / get_increments (§III.C) -------------------------------
+    def get_increments(self, pairs: Sequence[tuple[Timestamp, Timestamp]], *,
+                       significant_fields: Sequence[str] | None = None,
+                       fields: Sequence[str] | None = None) -> list[Increment]:
+        """Entries whose significant fields changed in (t0, t1], for many
+        (t0, t1) windows at once: one batched scan over the unique window
+        endpoints serves every pair. Duplicate windows are computed once
+        and share the returned Increment object (as get_versions does).
 
         Mirrors the paper's tool-specific change detection: a BLAST plugin
         passes significant_fields=["sequence"], so annotation-only updates
         produce an empty increment.
         """
-        sig = list(significant_fields) if significant_fields is not None else list(self.fields)
+        sig = (list(significant_fields) if significant_fields is not None
+               else list(self.fields))
         out_fields = list(fields) if fields is not None else list(self.fields)
+        pairs = [(int(t0), int(t1)) for t0, t1 in pairs]
+        if not pairs:
+            return []
+        upairs = list(dict.fromkeys(pairs))
+        if len(upairs) == 1 and not self._superlog_fresh():
+            inc = self._get_increment_cold(*upairs[0], sig=sig,
+                                           out_fields=out_fields)
+            return [inc] * len(pairs)
+        uniq = list(dict.fromkeys(t for p in upairs for t in p))
+        q_of = {t: i for i, t in enumerate(uniq)}
+        sl = self.superlog()
+        bcum = sl.boundary_cums(uniq)
+        exists, _ever = sl.exists_matrix(bcum)
+        cnt = {name: sl.counts(name, bcum)
+               for name in dict.fromkeys(sig + out_fields)}
+        sels, kinds = [], []
+        for t0, t1 in upairs:
+            i0, i1 = q_of[t0], q_of[t1]
+            changed = np.zeros(self.n_rows, bool)
+            for name in sig:
+                changed |= (cnt[name][i1] - cnt[name][i0]) > 0
+            e0, e1 = exists[i0], exists[i1]
+            new = e1 & ~e0
+            deleted = e0 & ~e1
+            updated = e1 & e0 & changed
+            sel = np.nonzero(new | deleted | updated)[0]
+            kind = np.zeros(len(sel), np.int8)
+            kind[new[sel]] = KIND_NEW
+            kind[updated[sel]] = KIND_UPDATED
+            kind[deleted[sel]] = KIND_DELETED
+            sels.append(sel)
+            kinds.append(kind)
+        vals = {name: sl.gather_many(name, [cnt[name][q_of[t1]]
+                                            for _, t1 in upairs], sels)
+                for name in out_fields}
+        by_pair = {}
+        for qi, ((t0, t1), sel, kind) in enumerate(zip(upairs, sels, kinds)):
+            values = {}
+            for name in out_fields:
+                v = vals[name][qi]
+                v[kind == KIND_DELETED] = 0
+                values[name] = v
+            by_pair[(t0, t1)] = Increment(
+                t0=t0, t1=t1, keys=[self.row_keys[r] for r in sel],
+                row_idx=sel.astype(np.int32), kind=kind, values=values)
+        return [by_pair[p] for p in pairs]
+
+    def get_increment(self, t0: Timestamp, t1: Timestamp, *,
+                      significant_fields: Sequence[str] | None = None,
+                      fields: Sequence[str] | None = None) -> Increment:
+        return self.get_increments([(t0, t1)],
+                                   significant_fields=significant_fields,
+                                   fields=fields)[0]
+
+    def _get_increment_cold(self, t0: Timestamp, t1: Timestamp, *,
+                            sig: list[str], out_fields: list[str]) -> Increment:
+        """Single-window increment over the involved fields' own CSR logs
+        (no fused-superlog build)."""
         changed = np.zeros(self.n_rows, bool)
         for name in sig:
-            changed |= self.fields[name].log.changed_counts(self.n_rows, t0, t1) > 0
+            changed |= self.fields[name].log.changed_counts(
+                self.n_rows, t0, t1) > 0
         e0 = self.exists_at(t0)
         e1 = self.exists_at(t1)
         new = e1 & ~e0
         deleted = e0 & ~e1
         updated = e1 & e0 & changed
-        any_rel = new | deleted | updated
-        sel = np.nonzero(any_rel)[0]
+        sel = np.nonzero(new | deleted | updated)[0]
         kind = np.zeros(len(sel), np.int8)
         kind[new[sel]] = KIND_NEW
         kind[updated[sel]] = KIND_UPDATED
@@ -387,7 +642,8 @@ class VersionedStore:
             v[kind == KIND_DELETED] = 0
             values[name] = v
         return Increment(t0=t0, t1=t1, keys=[self.row_keys[r] for r in sel],
-                         row_idx=sel.astype(np.int32), kind=kind, values=values)
+                         row_idx=sel.astype(np.int32), kind=kind,
+                         values=values)
 
     # -- compaction (production housekeeping; paper §III.E leaves retention
     # to "a cron job" — at fleet scale the cell log needs real compaction) --
@@ -427,6 +683,7 @@ class VersionedStore:
                            n_entries=n_base, n_new=n_base, n_updated=0,
                            n_deleted=0)
         self.versions = [base] + kept
+        self._invalidate_log()
         return {"cells_dropped": dropped, "versions_kept": len(kept) + 1}
 
     # -- persistence with delta-packed cell segments (§III.B compression) ----
@@ -490,6 +747,7 @@ class VersionedStore:
         st.exists_log._row_ptr = eptr
         st.exists_log._n_rows_at_build = st.n_rows
         st._exists_head[: st.n_rows] = st.exists_at(TS_MAX)
+        st._invalidate_log()
         return st
 
     # -- distribution ---------------------------------------------------------

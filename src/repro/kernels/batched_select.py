@@ -1,0 +1,105 @@
+"""Batched Pallas masked-cumsum: one launch materializes MANY versions.
+
+``masked_cumsum`` (version_select.py) answers one query timestamp per
+launch, so materializing N versions of an F-field store costs N*F kernel
+launches, each re-streaming the CSR log. Production platforms re-run
+analyses against many pinned versions concurrently (the paper's §III.C
+workload; OrpheusDB's multi-version checkout), so this kernel computes the
+inclusive cumsum of ``ts <= t_q`` for a *vector* of Q query timestamps in a
+single launch with grid ``(ts_tile, query)``: each grid cell re-reads one
+timestamp tile (already VMEM-resident across the inner query axis) and
+emits the intra-tile cumsum for one query. The tiny per-(query, tile)
+offset cumsum and the CSR boundary gathers run in XLA, exactly as in the
+single-query kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from ._compat import cdiv, interpret_default
+
+TILE_C = 2048
+
+
+def _batched_masked_cumsum_kernel(ts_ref, tq_ref, cum_ref, tot_ref):
+    t = tq_ref[0]
+    m = (ts_ref[:] <= t).astype(jnp.int32)
+    c = jnp.cumsum(m)
+    cum_ref[0, :] = c
+    tot_ref[0, 0] = c[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array, *,
+                          interpret: bool | None = None) -> jax.Array:
+    """ts: (C,); t_queries: (Q,) -> (Q, C) int32 inclusive cumsum of
+    (ts <= t_q) per query. interpret=None: kernel on TPU, jitted ref on CPU;
+    True: force kernel (interpret mode off-TPU)."""
+    t_queries = jnp.asarray(t_queries, dtype=ts.dtype)
+    if interpret is None:
+        if interpret_default():
+            return ref.ref_batched_masked_cumsum(ts, t_queries)
+        interpret = False
+    (c,) = ts.shape
+    (q,) = t_queries.shape
+    if c == 0 or q == 0:
+        return jnp.zeros((q, c), jnp.int32)
+    c_pad = cdiv(c, TILE_C) * TILE_C
+    if c_pad != c:
+        # pad above every possible query (queries are clamped below TS_MAX)
+        pad = jnp.full((c_pad - c,), jnp.iinfo(ts.dtype).max, ts.dtype)
+        ts = jnp.concatenate([ts, pad])
+    n_tiles = c_pad // TILE_C
+    intra, totals = pl.pallas_call(
+        _batched_masked_cumsum_kernel,
+        grid=(n_tiles, q),
+        in_specs=[
+            pl.BlockSpec((TILE_C,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_C), lambda i, j: (j, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, c_pad), jnp.int32),
+            jax.ShapeDtypeStruct((q, n_tiles), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ts, t_queries)
+    offsets = jnp.concatenate(
+        [jnp.zeros((q, 1), jnp.int32), jnp.cumsum(totals, axis=1)[:, :-1]],
+        axis=1)
+    out = intra + jnp.repeat(offsets, TILE_C, axis=1,
+                             total_repeat_length=c_pad)
+    return out[:, :c]
+
+
+def batched_version_select(log_vals, log_ts, row_ptr, t_queries, *,
+                           interpret: bool | None = None):
+    """Segmented last-cell-with-ts<=T selection for Q query timestamps.
+
+    log_vals: (C, W); log_ts: (C,) ascending within each row segment;
+    row_ptr: (N+1,); t_queries: (Q,). Returns (out (Q, N, W), found (Q, N)).
+    One batched scan replaces Q independent ``version_select`` launches.
+    """
+    t_queries = jnp.asarray(t_queries)
+    (q,) = t_queries.shape
+    n = row_ptr.shape[0] - 1
+    if log_ts.shape[0] == 0:  # empty log: nothing found anywhere
+        return (jnp.zeros((q, n) + log_vals.shape[1:], log_vals.dtype),
+                jnp.zeros((q, n), bool))
+    cum = batched_masked_cumsum(log_ts, t_queries, interpret=interpret)
+    cum0 = jnp.concatenate([jnp.zeros((q, 1), jnp.int32), cum], axis=1)
+    lo = row_ptr[:-1]
+    hi = row_ptr[1:]
+    cnt = cum0[:, hi] - cum0[:, lo]
+    found = cnt > 0
+    idx = jnp.clip(lo[None, :] + cnt - 1, 0, max(log_ts.shape[0] - 1, 0))
+    out = jnp.where(found[..., None], log_vals[idx], 0)
+    return out, found

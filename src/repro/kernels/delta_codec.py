@@ -26,7 +26,8 @@ TILE_N = 512
 def _pack_int_kernel(new_ref, old_ref, delta_ref, maxabs_ref):
     d = new_ref[:, :] - old_ref[:, :]
     delta_ref[:, :] = d
-    maxabs_ref[0] = jnp.max(jnp.abs(d))
+    # widen before |.|: the stat ref is int32 and abs(int8 -128) overflows
+    maxabs_ref[0] = jnp.max(jnp.abs(d.astype(jnp.int32)))
 
 
 def _pack_xor_kernel(new_ref, old_ref, delta_ref, nz_ref):
@@ -90,7 +91,7 @@ def delta_pack(new: jax.Array, old: jax.Array, *, interpret: bool | None = None)
             di, _ = _as_int_lanes(d)
             stat = (jnp.sum((di != 0).astype(jnp.int32))[None]
                     if jnp.issubdtype(new.dtype, jnp.floating)
-                    else jnp.max(jnp.abs(di))[None])
+                    else jnp.max(jnp.abs(di.astype(jnp.int32)))[None])
             return d, stat
         interpret = False
     is_float = jnp.issubdtype(new.dtype, jnp.floating)

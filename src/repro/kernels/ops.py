@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .batched_select import batched_masked_cumsum, batched_version_select
 from .delta_codec import delta_pack, delta_unpack, narrow_dtype
 from .fingerprint import fingerprint
 from .flash_attention import flash_attention
@@ -18,6 +19,7 @@ from .version_select import masked_cumsum, version_select
 
 __all__ = [
     "fingerprint", "fingerprint_rows", "masked_cumsum", "version_select",
+    "batched_masked_cumsum", "batched_version_select",
     "delta_pack", "delta_unpack", "narrow_dtype", "masked_merge",
     "flash_attention", "to_int_lanes", "ref",
 ]

@@ -50,6 +50,33 @@ def ref_masked_cumsum(ts: jax.Array, t_query) -> jax.Array:
     return jnp.cumsum(m, dtype=jnp.int32)
 
 
+def ref_batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array) -> jax.Array:
+    """ts: (C,); t_queries: (Q,) -> (Q, C) int32 inclusive cumsum of
+    (ts <= t_q), one row per query."""
+    m = (ts[None, :] <= jnp.asarray(t_queries, ts.dtype)[:, None])
+    return jnp.cumsum(m.astype(jnp.int32), axis=1, dtype=jnp.int32)
+
+
+def ref_batched_version_select(log_vals, log_ts, row_ptr, t_queries):
+    """Q-query generalization of ref_version_select: returns
+    (out (Q, N, W), found (Q, N))."""
+    t_queries = jnp.asarray(t_queries)
+    (q,) = t_queries.shape
+    n = row_ptr.shape[0] - 1
+    if log_ts.shape[0] == 0:
+        return (jnp.zeros((q, n) + log_vals.shape[1:], log_vals.dtype),
+                jnp.zeros((q, n), bool))
+    cum = ref_batched_masked_cumsum(log_ts, t_queries)
+    cum0 = jnp.concatenate([jnp.zeros((q, 1), jnp.int32), cum], axis=1)
+    lo = row_ptr[:-1]
+    hi = row_ptr[1:]
+    cnt = cum0[:, hi] - cum0[:, lo]
+    found = cnt > 0
+    idx = jnp.clip(lo[None, :] + cnt - 1, 0, max(log_ts.shape[0] - 1, 0))
+    out = jnp.where(found[..., None], log_vals[idx], jnp.zeros((), log_vals.dtype))
+    return out, found
+
+
 def ref_version_select(log_vals, log_ts, row_ptr, t_query):
     """Segmented last-cell-with-ts<=T selection over a CSR cell log.
 

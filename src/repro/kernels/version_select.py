@@ -50,8 +50,8 @@ def masked_cumsum(ts: jax.Array, t_query, *, interpret: bool | None = None) -> j
     tq = jnp.asarray(t_query, dtype=ts.dtype)
     if c_pad != c:
         # pad with a value > t_query so the padding never counts
-        ts = jnp.pad(ts, (0, c_pad - c), constant_values=True)
-        ts = ts.at[c:].set(tq + jnp.asarray(1, ts.dtype))
+        ts = jnp.concatenate(
+            [ts, jnp.full((c_pad - c,), tq + jnp.asarray(1, ts.dtype), ts.dtype)])
     n_tiles = c_pad // TILE_C
     intra, totals = pl.pallas_call(
         _masked_cumsum_kernel,

@@ -90,6 +90,8 @@ def _measure(arch, shape_name, multi_pod, cfg_override=None):
                                            run=run, cfg_override=cfg_override)
     compiled = lowered.compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # pre-0.5 jax returns [dict]
+        cost = cost[0] if cost else {}
     coll = rl.collective_bytes(compiled.as_text())
     return compiled, cfg, shape, mesh, {
         "flops": float(cost.get("flops", 0.0)),

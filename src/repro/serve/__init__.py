@@ -1,1 +1,5 @@
-"""Serving: batched engine, sampling, bucketed scheduler."""
+"""Serving: batched engine, sampling, bucketed scheduler, and the GeStore
+version-materialization service (gestore_service.py)."""
+from .gestore_service import GeStoreService, VersionRequest
+
+__all__ = ["GeStoreService", "VersionRequest"]

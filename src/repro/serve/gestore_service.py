@@ -1,0 +1,160 @@
+"""GeStore version-materialization service (the serving face of §III.C).
+
+Production platforms re-run analyses against many pinned meta-database
+versions concurrently (the paper's motivating workload; OrpheusDB's
+multi-version checkout makes the same case for relational data). This
+service accepts concurrent get_version-style requests, groups them by store
+into timestamp batches, and serves each batch through the store's fused
+superlog (core/store._SuperLog + kernels/batched_select.py) — Q versions
+cost one batched scan, not Q x F kernel launches.
+
+Materialized views are memoized in an LRU *plan cache* keyed on
+``(store, log_epoch)``: a store mutation bumps its epoch, so stale plans
+age out naturally without explicit invalidation hooks. Per-host state is
+just the queue + cache; a fleet scales this horizontally exactly like
+serve/scheduler.py does for token serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future
+from typing import Mapping, Sequence
+
+from repro.core.store import VersionedStore, VersionView
+
+
+@dataclasses.dataclass(frozen=True)
+class VersionRequest:
+    """One version-materialization request."""
+    store: str
+    ts: int
+    fields: tuple | None = None
+    key_filter: str | None = None
+    include_deleted: bool = False
+
+    def plan_key(self) -> tuple:
+        return (self.ts, self.fields, self.key_filter, self.include_deleted)
+
+    def group_key(self) -> tuple:
+        """Requests sharing a group materialize in one get_versions call."""
+        return (self.store, self.fields, self.key_filter, self.include_deleted)
+
+
+class GeStoreService:
+    """Concurrent batched version materialization over a set of stores.
+
+    ``submit`` is thread-safe and returns a Future; ``flush`` drains the
+    queue, batching per store. ``materialize`` is the synchronous
+    convenience wrapper. Served views are memoized and shared across
+    clients, so their arrays are read-only — copy before mutating.
+    """
+
+    def __init__(self, stores, *, max_batch: int = 64,
+                 plan_cache_size: int = 16, max_views_per_plan: int = 256):
+        # accept a GeStore facade, or any {name: VersionedStore} mapping
+        self._stores: Mapping[str, VersionedStore] = getattr(
+            stores, "stores", stores)
+        self.max_batch = max_batch
+        self.plan_cache_size = plan_cache_size
+        self.max_views_per_plan = max_views_per_plan
+        self._lock = threading.Lock()          # guards the pending queue
+        self._flush_lock = threading.Lock()    # serializes plan cache + stats
+        self._pending: list[tuple[VersionRequest, Future]] = []
+        # (store, log_epoch) -> {plan_key: VersionView}, LRU over the epochs
+        self._plans: OrderedDict[tuple, dict] = OrderedDict()
+        self.stats = {"requests": 0, "batches": 0, "plan_hits": 0,
+                      "plan_misses": 0}
+
+    # -- request intake -------------------------------------------------------
+    def submit(self, store: str, ts: int, *, fields: Sequence[str] | None = None,
+               key_filter: str | None = None,
+               include_deleted: bool = False) -> "Future[VersionView]":
+        req = VersionRequest(store, int(ts),
+                             tuple(fields) if fields is not None else None,
+                             key_filter, include_deleted)
+        fut: Future = Future()
+        with self._lock:
+            self._pending.append((req, fut))
+            self.stats["requests"] += 1
+        return fut
+
+    def materialize(self, requests: Sequence[VersionRequest]) -> list[VersionView]:
+        futs = [self.submit(r.store, r.ts, fields=r.fields,
+                            key_filter=r.key_filter,
+                            include_deleted=r.include_deleted)
+                for r in requests]
+        self.flush()
+        return [f.result() for f in futs]
+
+    # -- plan cache -----------------------------------------------------------
+    def _plan(self, store_name: str) -> OrderedDict:
+        store = self._stores[store_name]
+        key = (store_name, store.log_epoch)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._plans[key] = OrderedDict()
+        self._plans.move_to_end(key)
+        while len(self._plans) > self.plan_cache_size:
+            self._plans.popitem(last=False)
+        return plan
+
+    # -- batched service loop -------------------------------------------------
+    def flush(self) -> int:
+        """Serve every pending request; returns the number served.
+        Concurrent flushes each drain their own slice of the queue and
+        serialize on the plan cache (it is an unsynchronized OrderedDict)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+        with self._flush_lock:
+            return self._serve(pending)
+
+    def _serve(self, pending: list[tuple[VersionRequest, Future]]) -> int:
+        groups: dict[tuple, list[tuple[VersionRequest, Future]]] = {}
+        for req, fut in pending:
+            groups.setdefault(req.group_key(), []).append((req, fut))
+        for (store_name, fields, key_filter, include_deleted), items in groups.items():
+            try:
+                store = self._stores[store_name]
+                plan = self._plan(store_name)
+                todo = []  # deduped uncached plan keys, insertion-ordered
+                for req, _ in items:
+                    pk = req.plan_key()
+                    if pk in plan or pk in todo:  # in-flight dup = a hit too
+                        self.stats["plan_hits"] += 1
+                    else:
+                        todo.append(pk)
+                        self.stats["plan_misses"] += 1
+                for chunk in (todo[i:i + self.max_batch]
+                              for i in range(0, len(todo), self.max_batch)):
+                    views = store.get_versions(
+                        [pk[0] for pk in chunk],
+                        fields=list(fields) if fields is not None else None,
+                        key_filter=key_filter,
+                        include_deleted=include_deleted)
+                    self.stats["batches"] += 1
+                    for view in views:
+                        # memoized views are shared across clients: freeze
+                        # them so in-place edits fail loudly instead of
+                        # corrupting every later cache hit
+                        for arr in view.values.values():
+                            arr.setflags(write=False)
+                        view.row_idx.setflags(write=False)
+                    plan.update(zip(chunk, views))
+                for req, fut in items:
+                    pk = req.plan_key()
+                    plan.move_to_end(pk)
+                    view = plan[pk]
+                    if fut.set_running_or_notify_cancel():  # skip cancelled
+                        fut.set_result(view)
+                # bound memory within one long-lived epoch too
+                while len(plan) > self.max_views_per_plan:
+                    plan.popitem(last=False)
+            except Exception as e:
+                for _, fut in items:
+                    if not fut.done() and fut.set_running_or_notify_cancel():
+                        fut.set_exception(e)
+        return len(pending)

@@ -1,0 +1,262 @@
+"""Batched multi-version materialization: kernel parity vs the per-timestamp
+reference, fused-superlog store APIs (get_versions / get_increments), the
+single-scan guarantee, and the GeStoreService batching/plan-cache path."""
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core.store import FieldSchema, VersionedStore, TS_MAX, KIND_DELETED
+from repro.serve.gestore_service import GeStoreService, VersionRequest
+
+
+def mk_csr_log(rng, n_rows, n_cells, width=3, ts_hi=100):
+    """Random CSR cell log sorted by (row, ts), as _CellLog builds it."""
+    rows = rng.integers(0, n_rows, n_cells).astype(np.int32)
+    tss = rng.integers(0, ts_hi, n_cells).astype(np.int32)
+    order = np.lexsort((tss, rows))
+    rows, tss = rows[order], tss[order]
+    vals = rng.integers(-50, 50, (n_cells, width)).astype(np.int32)
+    ptr = np.zeros(n_rows + 1, np.int32)
+    np.add.at(ptr, rows + 1, 1)
+    return vals, tss, np.cumsum(ptr).astype(np.int32)
+
+
+def mk_store(rng, n_versions=4, pool=24):
+    st = VersionedStore("t", [FieldSchema("a", 4, "int32"),
+                              FieldSchema("b", 2, "float32")])
+    keys = [f"K{i:02d}" for i in range(pool)]
+    for v in range(n_versions):
+        sub = sorted(rng.choice(keys, size=rng.integers(8, pool), replace=False))
+        st.update((v + 1) * 10, sub,
+                  {"a": rng.integers(0, 50, (len(sub), 4)).astype(np.int32),
+                   "b": rng.normal(size=(len(sub), 2)).astype(np.float32)})
+    return st
+
+
+# ---------------------------------------------------------------------------
+# kernel layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_cells", [1, 7, 2047, 2048, 2049, 5001])
+def test_batched_cumsum_matches_per_ts(n_cells, rng):
+    ts = np.sort(rng.integers(0, 97, n_cells)).astype(np.int32)
+    tq = np.array([-1, 0, 13, 96, 97, TS_MAX], np.int32)
+    got = np.asarray(ops.batched_masked_cumsum(
+        jnp.asarray(ts), jnp.asarray(tq), interpret=True))
+    for i, t in enumerate(tq):
+        want = np.asarray(ops.masked_cumsum(jnp.asarray(ts), t, interpret=True))
+        assert np.array_equal(got[i], want), t
+    # dispatch default (ref path on CPU) agrees with the kernel
+    assert np.array_equal(
+        got, np.asarray(ops.batched_masked_cumsum(jnp.asarray(ts),
+                                                  jnp.asarray(tq))))
+
+
+def test_batched_select_matches_per_ts_ref(rng):
+    vals, tss, ptr = mk_csr_log(rng, n_rows=41, n_cells=300)
+    tq = np.array([0, 5, 50, 99, 100, TS_MAX], np.int32)
+    out, found = ops.batched_version_select(
+        jnp.asarray(vals), jnp.asarray(tss), jnp.asarray(ptr),
+        jnp.asarray(tq), interpret=True)
+    for i, t in enumerate(tq):
+        o1, f1 = ref.ref_version_select(jnp.asarray(vals), jnp.asarray(tss),
+                                        jnp.asarray(ptr), t)
+        assert np.array_equal(np.asarray(out)[i], np.asarray(o1))
+        assert np.array_equal(np.asarray(found)[i], np.asarray(f1))
+
+
+def test_batched_select_empty_log():
+    vals = jnp.zeros((0, 3), jnp.int32)
+    tss = jnp.zeros((0,), jnp.int32)
+    ptr = jnp.zeros((8,), jnp.int32)
+    out, found = ops.batched_version_select(vals, tss, ptr,
+                                            jnp.asarray([1, 2, TS_MAX]))
+    assert out.shape == (3, 7, 3) and not np.asarray(found).any()
+    assert not np.asarray(out).any()
+
+
+def test_batched_cumsum_clamp_edge(rng):
+    """Padding must never count, even for queries at the TS_MAX clamp."""
+    for n_cells in (2047, 2049):  # force padding on both sides of a tile
+        ts = np.full(n_cells, TS_MAX, np.int32)
+        got = np.asarray(ops.batched_masked_cumsum(
+            jnp.asarray(ts), jnp.asarray([TS_MAX, TS_MAX - 1], np.int32),
+            interpret=True))
+        assert got[0, -1] == n_cells and got[1, -1] == 0
+
+
+# ---------------------------------------------------------------------------
+# store layer
+# ---------------------------------------------------------------------------
+
+def test_get_versions_matches_get_version(rng):
+    st = mk_store(rng)
+    st.delete(45, [st.get_version(40).keys[0]])
+    qs = [5, 10, 15, 25, 40, 45, 47, TS_MAX, TS_MAX + 10]
+    views = st.get_versions(qs)
+    assert len(views) == len(qs)
+    for t, v in zip(qs, views):
+        w = st.get_version(t)
+        assert v.ts == t and v.keys == w.keys
+        assert np.array_equal(v.row_idx, w.row_idx)
+        for f in ("a", "b"):
+            assert np.array_equal(v.values[f], w.values[f]), (t, f)
+
+
+def test_get_versions_filters_and_deleted(rng):
+    st = mk_store(rng)
+    st.delete(45, [st.get_version(40).keys[0]])
+    for kw in (dict(include_deleted=True), dict(key_filter=r"^K0"),
+               dict(fields=["a"])):
+        v = st.get_versions([45, 47], **kw)
+        for t, got in zip([45, 47], v):
+            want = st.get_version(t, **kw)
+            assert got.keys == want.keys
+            for f in got.values:
+                assert np.array_equal(got.values[f], want.values[f])
+
+
+def test_get_versions_empty_store_and_empty_batch():
+    st = VersionedStore("t", [FieldSchema("a", 2, "int32")])
+    assert st.get_versions([]) == []
+    v = st.get_versions([1, TS_MAX])
+    assert [len(x) for x in v] == [0, 0]
+
+
+def test_get_versions_all_deleted(rng):
+    st = VersionedStore("t", [FieldSchema("a", 2, "int32")])
+    st.update(1, ["x", "y"], {"a": np.ones((2, 2), np.int32)})
+    st.delete(2, ["x", "y"])
+    v1, v2 = st.get_versions([1, 2])
+    assert len(v1) == 2 and len(v2) == 0
+    ever = st.get_versions([2], include_deleted=True)[0]
+    assert sorted(k.decode() for k in ever.keys) == ["x", "y"]
+
+
+def test_get_versions_single_scan(rng, monkeypatch):
+    """8 versions x F fields on a 4-release store = ONE batched scan."""
+    st = mk_store(rng, n_versions=4)
+    st.superlog()  # warm the lazy build
+    calls = []
+    orig = ops.batched_masked_cumsum
+
+    def counted(ts, tq, **kw):
+        calls.append(np.asarray(tq).shape)
+        return orig(ts, tq, **kw)
+
+    monkeypatch.setattr("repro.core.store.kops.batched_masked_cumsum", counted)
+    views = st.get_versions([10, 20, 30, 40, 15, 25, 35, TS_MAX])
+    assert len(views) == 8
+    assert calls == [(8,)]
+
+
+def test_superlog_epoch_invalidation(rng):
+    st = mk_store(rng, n_versions=2)
+    sl1 = st.superlog()
+    assert st.superlog() is sl1          # stable while the log is unchanged
+    st.update(100, ["K00"], {"a": np.zeros((1, 4), np.int32),
+                             "b": np.zeros((1, 2), np.float32)},
+              full_release=False)
+    sl2 = st.superlog()
+    assert sl2 is not sl1 and sl2.epoch > sl1.epoch
+
+
+def test_get_increments_matches_get_increment(rng):
+    st = mk_store(rng)
+    st.delete(45, [st.get_version(40).keys[0]])
+    pairs = [(10, 20), (10, 40), (20, 45), (-1, 10), (40, 45)]
+    incs = st.get_increments(pairs, significant_fields=["a"])
+    for (t0, t1), inc in zip(pairs, incs):
+        one = st.get_increment(t0, t1, significant_fields=["a"])
+        assert (inc.t0, inc.t1) == (one.t0, one.t1)
+        assert inc.keys == one.keys
+        assert np.array_equal(inc.kind, one.kind)
+        for f in ("a", "b"):
+            assert np.array_equal(inc.values[f], one.values[f])
+        # deleted rows carry zeroed values
+        assert not inc.values["a"][inc.kind == KIND_DELETED].any()
+
+
+# ---------------------------------------------------------------------------
+# service layer
+# ---------------------------------------------------------------------------
+
+def test_service_concurrent_submit_matches_store(rng):
+    st = mk_store(rng)
+    svc = GeStoreService({"t": st}, max_batch=4)
+    futs = {}
+
+    def worker(t):
+        futs[t] = svc.submit("t", t, fields=["a"])
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in (10, 20, 30, 40, 15, 25)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert svc.flush() == 6
+    for t, fut in futs.items():
+        want = st.get_version(t, fields=["a"])
+        got = fut.result(timeout=1)
+        assert got.keys == want.keys
+        assert np.array_equal(got.values["a"], want.values["a"])
+
+
+def test_service_plan_cache_and_epoch(rng):
+    st = mk_store(rng)
+    svc = GeStoreService({"t": st}, plan_cache_size=2)
+    v1 = svc.materialize([VersionRequest("t", 20, fields=("a",))])[0]
+    assert svc.stats["plan_misses"] == 1
+    v2 = svc.materialize([VersionRequest("t", 20, fields=("a",))])[0]
+    assert svc.stats["plan_hits"] == 1 and v2 is v1   # memoized plan
+    # mutation bumps the epoch -> the plan is stale and re-materialized
+    st.update(90, ["K00"], {"a": np.full((1, 4), 7, np.int32),
+                            "b": np.zeros((1, 2), np.float32)},
+              full_release=False)
+    v3 = svc.materialize([VersionRequest("t", 20, fields=("a",))])[0]
+    assert v3 is not v1 and v3.keys == v1.keys
+    # duplicate requests in one flush dedupe into a single materialization
+    misses = svc.stats["plan_misses"]
+    a, b = svc.materialize([VersionRequest("t", 30), VersionRequest("t", 30)])
+    assert a is b and svc.stats["plan_misses"] == misses + 1
+
+
+def test_generate_files_batch_matches_single(tmp_path, rng):
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=32, desc_width=8))
+    reg.register_tool(core.ToolPlugin(
+        "blastp",
+        core.FileGenerator(parser="fasta",
+                           output_fields=["sequence", "length", "desc"],
+                           significant_fields=["sequence", "length"])))
+    gs = core.GeStore(str(tmp_path / "a"), reg)
+    gs2 = core.GeStore(str(tmp_path / "b"), reg)
+    fa1 = "".join(f">S{i:03d} d\n{'ACDE' * 6}\n" for i in range(8))
+    fa2 = "".join(f">S{i:03d} d\n{'ACDE' * 6 if i % 3 else 'WWWW' * 6}\n"
+                  for i in range(10))
+    for g in (gs, gs2):
+        g.add_release("up", 100, fa1, parser_name="fasta")
+        g.add_release("up", 200, fa2, parser_name="fasta")
+
+    reqs = [{"tool": "blastp", "store": "up", "t_version": 100},
+            {"tool": "blastp", "store": "up", "t_version": 200},
+            {"tool": "blastp", "store": "up", "t_version": 200, "t_last": 100},
+            {"tool": "blastp", "store": "up", "t_version": 100}]  # dup -> cached
+    batch = gs.generate_files_batch(reqs)
+    singles = [gs2.generate_files(r["tool"], r["store"],
+                                  t_version=r["t_version"],
+                                  t_last=r.get("t_last")) for r in reqs]
+    for got, want in zip(batch, singles):
+        assert got.n_entries == want.n_entries
+        assert open(got.path).read() == open(want.path).read()
+        for k in ("deleted_keys", "updated_keys", "new_keys",
+                  "db_size_old", "db_size_new"):
+            assert got.context.get(k) == want.context.get(k), k
+    assert batch[3].mode == "cached" and batch[3].path == batch[0].path

@@ -3,7 +3,7 @@ swept over shapes and dtypes + hypothesis property tests."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels import ops, ref
 

@@ -2,7 +2,7 @@
 recompute (top-k, scores, and the e-value normalizer Z)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 import repro.core as core
 from repro.core.store import FieldSchema, VersionedStore

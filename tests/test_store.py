@@ -4,7 +4,7 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.store import (FieldSchema, VersionedStore, KIND_DELETED,
                               KIND_NEW, KIND_UPDATED)
