@@ -22,13 +22,14 @@ def main() -> None:
     sys.path.insert(0, _ROOT)
     from benchmarks import (fig1_growth, roofline_table, table1_lifecycle,
                             table2_incremental, table3_split,
-                            table4_application, table5_batched)
+                            table4_application, table5_batched,
+                            table6_storage)
     print("name,us_per_call,derived")
     results = []
     failures = []
     for mod in (table1_lifecycle, table2_incremental, table3_split,
-                table4_application, table5_batched, fig1_growth,
-                roofline_table):
+                table4_application, table5_batched, table6_storage,
+                fig1_growth, roofline_table):
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.3f},{derived}")

@@ -68,8 +68,15 @@ class VersionCache:
         return path
 
     def evict(self, max_bytes: int) -> int:
-        """Drop least-recently-used files until total <= max_bytes."""
-        rows = sorted((r for r in self.tables.files.values() if r.path),
+        """Drop least-recently-used generated files until total <= max_bytes.
+
+        Store segment manifests (plugin ``store-segment``, recorded by
+        ``GeStore.flush``) are never candidates: generated files are
+        regenerable from the store, but the segments ARE the store —
+        evicting them would destroy data, not cache.
+        """
+        rows = sorted((r for r in self.tables.files.values()
+                       if r.path and r.plugin != "store-segment"),
                       key=lambda r: r.last_used)
         total = sum(r.bytes for r in rows)
         n = 0

@@ -58,24 +58,121 @@ def _live_filtered(inc: Increment, key_filter: str | None) -> Increment:
 
 
 class GeStore:
-    """Facade owning stores + cache + system tables + plugin registry."""
+    """Facade owning stores + cache + system tables + plugin registry.
 
-    def __init__(self, root: str, registry: PluginRegistry):
+    Stores persist under ``<root>/stores/<name>`` in the segmented layout
+    (core/segments.py): ``flush()`` saves them incrementally, and the
+    constructor reopens every persisted store with a lazy load — so a
+    GeStore over hundreds of releases starts in O(manifests), not O(cells).
+    """
+
+    def __init__(self, root: str, registry: PluginRegistry, *,
+                 autoload: bool = True):
+        """Args:
+          root: GeStore home (system tables, cache, persisted stores).
+          registry: parser/tool plugins.
+          autoload: reopen stores previously persisted by ``flush()``
+            (lazy — segment files are read only when queries need them).
+        """
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.tables = SystemTables(os.path.join(root, "sys"))
         self.cache = VersionCache(os.path.join(root, "cache"), self.tables)
         self.registry = registry
         self.stores: dict[str, VersionedStore] = {}
+        self.stores_root = os.path.join(root, "stores")
+        os.makedirs(self.stores_root, exist_ok=True)
+        if autoload:
+            self._open_persisted()
+
+    # -- persistence (segmented store layout) --------------------------------
+    def _open_persisted(self) -> None:
+        from .segments import MANIFEST_NAME
+        for d in sorted(os.listdir(self.stores_root)):
+            p = os.path.join(self.stores_root, d)
+            if not os.path.isdir(p):
+                continue
+            if (os.path.exists(os.path.join(p, MANIFEST_NAME))
+                    or os.path.exists(os.path.join(p, "meta.json"))):
+                st = VersionedStore.load(p, lazy=True)
+                self.stores[st.name] = st
+
+    def store_path(self, name: str) -> str:
+        from .segments import store_dir_name
+        return os.path.join(self.stores_root, store_dir_name(name))
+
+    def open_store(self, name: str) -> VersionedStore:
+        """The named store, transparently reopening it (lazy) from
+        ``store_path(name)`` when it is not in memory — e.g. after a
+        tiered-memory spill removed it from ``stores``.
+
+        Raises:
+          KeyError: the store neither exists in memory nor on disk.
+        """
+        st = self.stores.get(name)
+        if st is None:
+            from .segments import MANIFEST_NAME
+            p = self.store_path(name)
+            if not (os.path.exists(os.path.join(p, MANIFEST_NAME))
+                    or os.path.exists(os.path.join(p, "meta.json"))):
+                raise KeyError(name)
+            st = VersionedStore.load(p, lazy=True)
+            self.stores[name] = st
+        return st
+
+    def flush(self, store_name: str | None = None) -> dict[str, dict]:
+        """Persist stores to ``<root>/stores/<name>`` (incremental: only
+        segments newer than each manifest's watermark are written).
+
+        Args:
+          store_name: one store, or None for all.
+
+        Returns:
+          {store name: save stats} (see ``VersionedStore.save``).
+
+        Raises:
+          KeyError: unknown ``store_name``.
+        """
+        names = [store_name] if store_name is not None else list(self.stores)
+        out: dict[str, dict] = {}
+        for name in names:
+            path = self.store_path(name)
+            stats = self.stores[name].save(path)
+            out[name] = stats
+            # index the manifest in the `files` table: segment bytes are
+            # visible to ops/eviction accounting but never cache-evictable
+            self.tables.record_file(f"store-segments|{name}",
+                                    os.path.join(path, "MANIFEST.json"),
+                                    "store-segment", True,
+                                    nbytes=stats["disk_bytes"])
+        return out
 
     # -- data-feeder interface (Fig. 3 left) --------------------------------
     def add_release(self, store_name: str, ts: int, text: str, *,
                     parser_name: str, label: str = "",
                     full_release: bool = True):
+        """Parse and ingest one release into a store (created on first use).
+
+        Args:
+          store_name: target store (a new VersionedStore is created with
+            the parser's schema when absent).
+          ts: release timestamp (strictly greater than the store's last).
+          text: raw release file content for ``parser_name``.
+          label: human-readable release label.
+          full_release: paper semantics — keys absent from this release
+            are tombstoned; False = patch semantics.
+
+        Returns:
+          VersionInfo with new/updated/deleted counts.
+
+        Raises:
+          KeyError: unknown parser. ValueError: non-monotonic ``ts``.
+        """
         parser = self.registry.parsers[parser_name]
         keys, table = parser.parse_text(text)
-        store = self.stores.get(store_name)
-        if store is None:
+        try:
+            store = self.open_store(store_name)  # in memory, or spilled
+        except KeyError:
             store = VersionedStore(store_name, parser.schema(),
                                    capacity=max(16, len(keys)))
             self.stores[store_name] = store
@@ -110,7 +207,7 @@ class GeStore:
             r = dict(raw)
             plugin = self.registry.tools[r["tool"]]
             parser = self.registry.parsers[plugin.generator.parser]
-            store = self.stores[r["store"]]
+            store = self.open_store(r["store"])
             t_last = r.get("t_last")
             desc = descriptor(r["store"], -1 if t_last is None else t_last,
                               r["t_version"], filter_expr=r.get("key_filter") or "",
@@ -132,7 +229,7 @@ class GeStore:
                 inc_groups.setdefault(key, []).append(i)
         incs: dict[int, Increment] = {}
         for (sname, sig, out_fields), idxs in inc_groups.items():
-            store = self.stores[sname]
+            store = self.open_store(sname)
             pairs = [(reqs[i][0]["t_last"], reqs[i][0]["t_version"])
                      for i in idxs]
             uniq = list(dict.fromkeys(pairs))
@@ -150,7 +247,7 @@ class GeStore:
                     (r["t_last"], r["t_version"]))
         sizes: dict[tuple[str, int], int] = {}
         for sname, tss in size_ts.items():
-            store, tss = self.stores[sname], sorted(tss)
+            store, tss = self.open_store(sname), sorted(tss)
             for t, view in zip(tss, store.get_versions(tss, fields=["length"])):
                 # keyed by store.name: _merge_context reads it back that way
                 sizes[(store.name, t)] = int(view.values["length"].sum())
@@ -174,7 +271,7 @@ class GeStore:
         # -- batched full-version materialization.
         views: dict[int, object] = {}
         for (sname, out_fields, key_filter), idxs in full_groups.items():
-            store = self.stores[sname]
+            store = self.open_store(sname)
             tss = [reqs[i][0]["t_version"] for i in idxs]
             uniq = list(dict.fromkeys(tss))
             got = dict(zip(uniq, store.get_versions(
@@ -204,7 +301,21 @@ class GeStore:
 
     def merge_files(self, tool: str, previous: str, partial: str, *,
                     context: dict) -> str:
-        """paper `mergeFiles`."""
+        """paper `mergeFiles`: merge a partial (incremental) tool output
+        into the previous full output via the tool's OutputMerger.
+
+        Args:
+          tool: registered tool name; previous/partial: tool output text;
+          context: the GeneratedInput.context of the incremental run
+            (changed-key sets, db sizes).
+
+        Returns:
+          The merged full output (plain concatenation when the tool has
+          no merger).
+
+        Raises:
+          KeyError: unknown tool.
+        """
         plugin = self.registry.tools[tool]
         if plugin.merger is None:
             return previous + partial

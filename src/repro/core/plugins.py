@@ -109,11 +109,28 @@ class OutputMerger(abc.ABC):
     @abc.abstractmethod
     def merge(self, previous: str, partial: str, *, context: dict) -> str:
         """Merge a partial (incremental) tool output into the previous full
-        output, fixing aggregate fields (e.g. BLAST e-values)."""
+        output, fixing aggregate fields (e.g. BLAST e-values).
+
+        Args:
+          previous: the full output of the last run against the old
+            version.
+          partial: the tool's output against the increment only.
+          context: `GeneratedInput.context` — changed-key sets
+            (``deleted_keys`` / ``updated_keys`` / ``new_keys``), db-size
+            fields when applicable, and the tool's params.
+
+        Returns:
+          Full output text equivalent to rerunning against the new
+          version.
+        """
 
 
 @dataclasses.dataclass
 class ToolPlugin:
+    """One unmodified tool's plugin bundle (§III.F): its file generator,
+    optional output merger, and free-form params. ``params`` is recorded
+    into cache descriptors, so two configurations of the same tool never
+    share generated files."""
     name: str
     generator: FileGenerator
     merger: OutputMerger | None = None
@@ -122,20 +139,28 @@ class ToolPlugin:
 
 
 class PluginRegistry:
+    """Registry mapping format names -> parsers and tool names -> plugins.
+    ``REGISTRY`` is the module-level default; GeStore takes any instance."""
+
     def __init__(self):
         self.parsers: dict[str, FileParser] = {}
         self.tools: dict[str, ToolPlugin] = {}
 
     def register_parser(self, parser: FileParser) -> FileParser:
+        """Register (and return) a parser under its ``format_name``.
+        Raises AssertionError when the parser has no format name."""
         assert parser.format_name, "parser needs format_name"
         self.parsers[parser.format_name] = parser
         return parser
 
     def register_tool(self, plugin: ToolPlugin) -> ToolPlugin:
+        """Register (and return) a tool plugin under its name."""
         self.tools[plugin.name] = plugin
         return plugin
 
     def parser_for(self, tool: str) -> FileParser:
+        """The parser a registered tool generates files with.
+        Raises KeyError for an unknown tool or unregistered format."""
         return self.parsers[self.tools[tool].generator.parser]
 
 

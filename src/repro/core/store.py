@@ -19,14 +19,30 @@ Row-space sharding: every device-side op here is data-parallel over rows or
 log cells, so a production deployment shards rows over the mesh ``data``
 axis; ``shard_spec()`` exposes the NamedSharding used by the distributed
 tests and the dry-run.
+
+Persistence is segmented and append-only (core/segments.py): ``save()``
+writes only cells newer than the on-disk manifest's watermark, ``load()``
+attaches lazy segment handles that are spliced into a log's CSR only when
+a query's timestamp bound reaches them, and ``compact(..., path=...)``
+rewrites covered segments into a base segment while retaining the tail.
+See the segments module docstring for the on-disk format.
+
+Invalidation contract: ``log_epoch`` is a monotone counter bumped by every
+log mutation (update/delete/add_field/compact/load). Any externally cached
+materialization derived from this store MUST be keyed on
+``(store name, log_epoch)`` — equal epoch for the same store object implies
+bit-identical query results, so caches need no other invalidation hook.
+The serve-layer plan cache and the tiered memory manager
+(serve/gestore_service.py) both rely on this; a store reloaded from disk
+after spilling gets its epoch floored above the spilled store's epoch so
+the contract survives eviction.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
+import hashlib
 import re
-from typing import Callable, Iterable, Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -95,7 +111,15 @@ class Increment:
 
 
 class _CellLog:
-    """Append-only timestamped cell log for one column, lazy CSR."""
+    """Append-only timestamped cell log for one column, lazy CSR.
+
+    Three cell sources feed the consolidated CSR: fresh appends
+    (``_chunks``), a previously consolidated CSR (``_csr``), and — after a
+    lazy load — on-disk segment handles (``_pending``, sorted by ts0).
+    Pending segments are materialized only when a caller's timestamp bound
+    reaches their range, so opening a 32-release store and querying one
+    pinned old version reads only the segments at or below that version.
+    """
 
     def __init__(self, width: int, dtype: np.dtype):
         self.width = width
@@ -104,11 +128,13 @@ class _CellLog:
         self._csr: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None  # vals, ts, order-rows
         self._row_ptr: np.ndarray | None = None
         self._n_rows_at_build = -1
+        self._pending: list = []  # unread segments.SegmentHandle, by ts0
 
     @property
     def n_cells(self) -> int:
-        return sum(len(c[1]) for c in self._chunks) + (
-            0 if self._csr is None else len(self._csr[1]))
+        return (sum(len(c[1]) for c in self._chunks)
+                + (0 if self._csr is None else len(self._csr[1]))
+                + sum(h.n_cells for h in self._pending))
 
     def append(self, rows: np.ndarray, ts: Timestamp, vals: np.ndarray) -> None:
         if len(rows) == 0:
@@ -119,8 +145,83 @@ class _CellLog:
                              np.ascontiguousarray(vals, dtype=self.dtype)))
         self._row_ptr = None  # CSR dirty
 
-    def csr(self, n_rows: int):
-        """Returns (vals (C,W), ts (C,), row_ptr (n_rows+1,)) sorted by (row, ts)."""
+    # -- lazy on-disk segments ------------------------------------------------
+    def attach_segments(self, handles) -> None:
+        """Register on-disk segment handles (from a lazy load) without
+        reading them."""
+        if handles:
+            self._pending = sorted(self._pending + list(handles),
+                                   key=lambda h: h.ts0)
+
+    def _materialize(self, handle) -> None:
+        rows, tss, vals = handle.materialize()
+        self._chunks.append((rows.astype(np.int32), tss.astype(np.int64),
+                             np.ascontiguousarray(vals, dtype=self.dtype)))
+        self._row_ptr = None
+
+    def _ensure(self, through_ts) -> None:
+        """Splice every pending segment with ts0 <= through_ts into the log
+        (cells strictly above the bound cannot affect a query at it)."""
+        if not self._pending:
+            return
+        keep = []
+        for h in self._pending:
+            if h.ts0 <= through_ts:
+                self._materialize(h)
+            else:
+                keep.append(h)
+        self._pending = keep
+
+    def splice_csr(self, vals: np.ndarray, tss: np.ndarray, rows: np.ndarray,
+                   ptr: np.ndarray, n_rows: int) -> None:
+        """Install a fully consolidated CSR directly (loader fast path)."""
+        self._csr = (vals, tss, rows)
+        self._chunks = []
+        self._row_ptr = np.asarray(ptr)
+        self._n_rows_at_build = n_rows
+
+    def cells_after(self, cutoff: Timestamp):
+        """All cells with ts > cutoff as (rows, ts, vals) sorted by
+        (row, ts) — the incremental-save extraction. Only pending segments
+        that could hold such cells (ts1 > cutoff) are read; for a store
+        loaded from ``cutoff``'s own manifest that is none of them, so the
+        cost is O(cells appended since the last save)."""
+        keep = []
+        for h in self._pending:
+            if h.ts1 > cutoff:
+                self._materialize(h)
+            else:
+                keep.append(h)
+        self._pending = keep
+        parts = list(self._chunks)
+        if self._csr is not None:
+            vals0, tss0, rows0 = self._csr
+            parts.insert(0, (rows0, tss0, vals0))
+        # mask per part BEFORE concatenating: a consolidated history with
+        # nothing past the cutoff contributes one comparison pass, not a
+        # full copy + lexsort — incremental save stays O(new cells)
+        kept = []
+        for rows, tss, vals in parts:
+            m = tss > cutoff
+            if m.any():
+                kept.append((rows[m], tss[m], vals[m]))
+        if not kept:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int64),
+                    np.zeros((0, self.width), self.dtype))
+        rows = np.concatenate([c[0] for c in kept])
+        tss = np.concatenate([c[1] for c in kept])
+        vals = np.concatenate([c[2] for c in kept])
+        order = np.lexsort((tss, rows))
+        return rows[order], tss[order], vals[order]
+
+    def csr(self, n_rows: int, *, through_ts: Timestamp | None = None):
+        """Returns (vals (C,W), ts (C,), row_ptr (n_rows+1,)) sorted by (row, ts).
+
+        ``through_ts`` bounds which pending on-disk segments must be
+        spliced in first: the returned CSR is complete for any query at
+        t <= through_ts (None = materialize everything).
+        """
+        self._ensure(np.inf if through_ts is None else through_ts)
         if self._row_ptr is not None and self._n_rows_at_build == n_rows:
             return self._csr[0], self._csr[1], self._row_ptr
         parts = list(self._chunks)  # each: (rows, ts, vals)
@@ -145,8 +246,9 @@ class _CellLog:
         return vals, tss, ptr
 
     def select_at(self, n_rows: int, t: Timestamp):
-        """(vals_at_t (n_rows, W), found (n_rows,)) via the Pallas kernel."""
-        vals, tss, ptr = self.csr(n_rows)
+        """(vals_at_t (n_rows, W), found (n_rows,)) via the Pallas kernel.
+        Only materializes on-disk segments at or below ``t``."""
+        vals, tss, ptr = self.csr(n_rows, through_ts=t)
         if len(tss) == 0:
             return (np.zeros((n_rows, self.width), self.dtype),
                     np.zeros(n_rows, bool))
@@ -157,7 +259,7 @@ class _CellLog:
 
     def changed_counts(self, n_rows: int, t0: Timestamp, t1: Timestamp) -> np.ndarray:
         """Per-row number of cells with t0 < ts <= t1 (windowed scan, §III.C)."""
-        _, tss, ptr = self.csr(n_rows)
+        _, tss, ptr = self.csr(n_rows, through_ts=t1)
         if len(tss) == 0:
             return np.zeros(n_rows, np.int32)
         ts_j = jnp.asarray(tss.astype(np.int32))
@@ -283,7 +385,11 @@ class _SuperLog:
 
 
 class _FieldColumn:
-    """Head state + cell log for one field."""
+    """Head state + cell log for one field.
+
+    ``head_stale`` marks heads not yet rebuilt after a lazy load; the store
+    rebuilds them (one select_at(TS_MAX)) before the first mutation that
+    needs change detection, so opening a store stays O(manifest)."""
 
     def __init__(self, schema: FieldSchema, capacity: int):
         self.schema = schema
@@ -291,6 +397,7 @@ class _FieldColumn:
         self.head_vals = np.zeros((capacity, schema.width), schema.np_dtype)
         self.head_fp = np.zeros((capacity, 2), np.int32)
         self.head_has = np.zeros(capacity, bool)
+        self.head_stale = False
 
     def grow(self, capacity: int) -> None:
         def g(a):
@@ -303,7 +410,14 @@ class _FieldColumn:
 
 
 class VersionedStore:
-    """One meta-database (one HBase table in the paper)."""
+    """One meta-database (one HBase table in the paper).
+
+    Public surface: ``update``/``delete`` ingest releases, ``get_version``/
+    ``get_versions`` and ``get_increment``/``get_increments`` materialize,
+    ``compact`` collapses old history, ``save``/``load`` persist through the
+    segmented on-disk layout (core/segments.py), and ``log_epoch`` is the
+    cache-invalidation contract (see module docstring).
+    """
 
     def __init__(self, name: str, schema: Sequence[FieldSchema], capacity: int = 1024):
         self.name = name
@@ -315,11 +429,37 @@ class VersionedStore:
         self.row_keys: list[bytes] = []
         self.exists_log = _CellLog(1, np.dtype(np.int8))
         self._exists_head = np.zeros(self.capacity, bool)
+        self._exists_head_stale = False
         self.versions: list[VersionInfo] = []
+        # chained per-release content digests (aligned with `versions`):
+        # the incremental-save compatibility check compares these as a
+        # prefix, so a same-shaped but different-content history can never
+        # be mistaken for "the same store, further along"
+        self._version_digests: list[str] = []
+        self._history_digest = ""
         self._log_epoch = 0
         self._superlog: _SuperLog | None = None
         for fs in schema:
             self.add_field(fs)
+
+    def _chain_digest(self, payload: bytes) -> None:
+        d = hashlib.sha256((self._history_digest + "|").encode()
+                           + payload).hexdigest()[:16]
+        self._history_digest = d
+        self._version_digests.append(d)
+
+    def _rechain_digests(self, seed: str) -> None:
+        """Rebuild the digest chain deterministically from the current
+        versions list (compaction replaces the history prefix; the seed
+        carries the pre-compaction content digest forward)."""
+        d = seed
+        out = []
+        for v in self.versions:
+            d = hashlib.sha256(
+                f"{d}|{dataclasses.asdict(v)}".encode()).hexdigest()[:16]
+            out.append(d)
+        self._version_digests = out
+        self._history_digest = out[-1] if out else seed
 
     # -- fused superlog lifecycle -------------------------------------------
     @property
@@ -343,8 +483,82 @@ class VersionedStore:
         return (sl is not None and sl.epoch == self._log_epoch
                 and sl.n_rows == self.n_rows)
 
+    def drop_superlog(self) -> None:
+        """Release the device-resident fused superlog (device -> host
+        demotion, used by the tiered memory manager). Query results are
+        unaffected: the next batched query rebuilds it from the host CSR."""
+        self._superlog = None
+
+    def nbytes(self) -> dict:
+        """Resident-memory accounting: ``{"host": int, "device": int}``.
+
+        host = consolidated CSRs + unconsolidated chunks + head arrays
+        (cells still pending on disk count zero — that is the point of the
+        lazy load); device = the fused superlog's uploaded buffers."""
+        host = self._exists_head.nbytes
+        for col in self.fields.values():
+            host += col.head_vals.nbytes + col.head_fp.nbytes + col.head_has.nbytes
+        for log in [c.log for c in self.fields.values()] + [self.exists_log]:
+            if log._csr is not None:
+                vals, tss, rows = log._csr
+                host += vals.nbytes + tss.nbytes + rows.nbytes
+            if log._row_ptr is not None:
+                host += log._row_ptr.nbytes
+            for rows, tss, vals in log._chunks:
+                host += vals.nbytes + tss.nbytes + rows.nbytes
+        device = 0
+        sl = self._superlog
+        if sl is not None:
+            if sl.ts is not None:
+                device += sl.ts.nbytes
+            for f in sl.fields.values():
+                if f._vals_dev is not None:
+                    device += f._vals_dev.nbytes
+        return {"host": host, "device": device}
+
+    # -- head (latest-value) state, rebuilt lazily after load ----------------
+    def mark_heads_stale(self) -> None:
+        """Defer head rebuilds (loader hook): heads are reconstructed from
+        the logs on the first mutation that needs change detection."""
+        for col in self.fields.values():
+            col.head_stale = True
+        self._exists_head_stale = True
+
+    def rebuild_heads(self, fields: Sequence[str] | None = None) -> None:
+        """Force stale heads fresh now.
+
+        Queries never need this (they read the logs), but code that reads
+        ``head_vals``/``head_fp``/``head_has`` directly MUST call it after
+        a lazy ``load()`` — heads are only rebuilt automatically on the
+        first mutation. ``fields=None`` rebuilds everything including the
+        EXISTS head; a field list rebuilds just those columns."""
+        for name in (fields if fields is not None else list(self.fields)):
+            self._ensure_head(name)
+        if fields is None:
+            self._ensure_exists_head()
+
+    def _ensure_head(self, name: str) -> None:
+        col = self.fields[name]
+        if not col.head_stale:
+            return
+        hv, found = col.log.select_at(self.n_rows, TS_MAX)
+        col.head_vals[: self.n_rows] = hv
+        col.head_has[: self.n_rows] = found
+        if found.any():
+            col.head_fp[np.nonzero(found)[0]] = kops.fingerprint_rows(hv[found])
+        col.head_stale = False
+
+    def _ensure_exists_head(self) -> None:
+        if not self._exists_head_stale:
+            return
+        self._exists_head[: self.n_rows] = self.exists_at(TS_MAX)
+        self._exists_head_stale = False
+
     # -- schema evolution (HBase column flexibility, §III.B) ----------------
     def add_field(self, fs: FieldSchema) -> None:
+        """Add a column (schema evolution). Existing rows read as zeros /
+        not-found until a release writes them. Raises ValueError when the
+        field already exists."""
         if fs.name in self.fields:
             raise ValueError(f"field {fs.name} exists")
         self.schema[fs.name] = fs
@@ -389,9 +603,26 @@ class VersionedStore:
         full_release=False: patch semantics, absent keys untouched — unless
         ``present_keys`` lists the full release key set (then rows outside
         it are tombstoned even though only changed rows carry data).
+
+        Args:
+          ts: release timestamp, strictly greater than ``last_ts`` (the
+            append-only logs and the incremental-save watermark both rely
+            on monotonicity).
+          keys: entry keys (str or bytes), aligned with ``table`` rows.
+          table: field name -> (len(keys), width) values; unknown fields
+            trigger schema evolution (a new column is added on the fly).
+          label: human-readable release label for the `updates` table.
+
+        Returns:
+          VersionInfo with new/updated/deleted counts.
+
+        Raises:
+          ValueError: non-monotonic ``ts``.
+          AssertionError: a table value block has the wrong shape.
         """
         if ts <= self.last_ts:
             raise ValueError(f"timestamps must be monotonic: {ts} <= {self.last_ts}")
+        self._ensure_exists_head()
         for name in table:
             if name not in self.fields:
                 # schema evolution on the fly: infer width/dtype
@@ -406,8 +637,10 @@ class VersionedStore:
         is_new = ~existed
 
         n_updated_rows = np.zeros(self.n_rows, bool)
+        hparts = [str(ts).encode(), str(len(keys)).encode()]
         for name, vals in table.items():
             col = self.fields[name]
+            self._ensure_head(name)
             vals = np.ascontiguousarray(vals, dtype=col.schema.np_dtype)
             if vals.ndim == 1:
                 vals = vals[:, None]
@@ -423,12 +656,15 @@ class VersionedStore:
                 col.head_fp[cr] = fp[changed]
                 col.head_has[cr] = True
                 n_updated_rows[cr] |= True
+                hparts += [name.encode(), cr.tobytes(),
+                           np.ascontiguousarray(fp[changed]).tobytes()]
 
         # EXISTS transitions
         appearing = rows[is_new]
         if len(appearing):
             self.exists_log.append(appearing, ts, np.ones((len(appearing), 1), np.int8))
             self._exists_head[appearing] = True
+            hparts.append(appearing.tobytes())
         n_deleted = 0
         if full_release or present_keys is not None:
             mask = np.zeros(self.n_rows, bool)
@@ -445,27 +681,48 @@ class VersionedStore:
                                        np.zeros((len(gone), 1), np.int8))
                 self._exists_head[gone] = False
                 n_deleted = len(gone)
+                hparts.append(gone.tobytes())
 
         n_new = int(is_new.sum())
         n_upd = int((n_updated_rows[rows] & existed).sum())
         info = VersionInfo(ts=ts, label=label or str(ts), n_entries=len(keys),
                            n_new=n_new, n_updated=n_upd, n_deleted=n_deleted)
         self.versions.append(info)
+        self._chain_digest(b"".join(hparts))
         self._invalidate_log()
         return info
 
     def delete(self, ts: Timestamp, keys: Sequence[bytes], *, label: str = "") -> VersionInfo:
+        """Tombstone ``keys`` at ``ts`` (history below ``ts`` is preserved).
+
+        Args:
+          ts: deletion timestamp, strictly greater than ``last_ts``.
+          keys: existing entry keys (str or bytes).
+          label: release label; defaults to ``delete@<ts>``.
+
+        Returns:
+          VersionInfo whose ``n_deleted`` is ``len(keys)``.
+
+        Raises:
+          ValueError: non-monotonic ``ts``.
+          KeyError: a key was never ingested.
+        """
+        if ts <= self.last_ts:
+            raise ValueError(f"timestamps must be monotonic: {ts} <= {self.last_ts}")
+        self._ensure_exists_head()
         keys = [k.encode() if isinstance(k, str) else bytes(k) for k in keys]
         rows = self._rows_for_keys(keys, create=False)
         self.exists_log.append(rows, ts, np.zeros((len(rows), 1), np.int8))
         self._exists_head[rows] = False
         info = VersionInfo(ts, label or f"delete@{ts}", len(keys), 0, 0, len(keys))
         self.versions.append(info)
+        self._chain_digest(b"delete|" + str(ts).encode() + rows.tobytes())
         self._invalidate_log()
         return info
 
     # -- exists at a point in time -------------------------------------------
     def exists_at(self, t: Timestamp) -> np.ndarray:
+        """(n_rows,) bool — which rows are alive (not tombstoned) at ``t``."""
         vals, found = self.exists_log.select_at(self.n_rows, t)
         return (vals[:, 0] > 0) & found
 
@@ -496,7 +753,22 @@ class VersionedStore:
         A single distinct timestamp against a cold superlog takes the
         per-field select_at path instead: building the whole-store fused
         log for one version of a few fields would upload every field's
-        cells (the update-then-read checkpoint/search workloads)."""
+        cells (the update-then-read checkpoint/search workloads) — and,
+        after a lazy load, would read every on-disk segment rather than
+        just the requested fields' ranges.
+
+        Args:
+          ts_list: timestamps to materialize (duplicates share one view).
+          fields: field subset (default: all).
+          key_filter: regex (bytes-matched) or predicate over row keys.
+          include_deleted: include tombstoned-but-once-alive rows.
+
+        Returns:
+          list[VersionView] aligned with ``ts_list``.
+
+        Raises:
+          KeyError: an unknown field name.
+        """
         fields = list(fields) if fields is not None else list(self.fields)
         ts_list = [int(t) for t in ts_list]
         if not ts_list:
@@ -559,6 +831,20 @@ class VersionedStore:
         Mirrors the paper's tool-specific change detection: a BLAST plugin
         passes significant_fields=["sequence"], so annotation-only updates
         produce an empty increment.
+
+        Args:
+          pairs: (t0, t1] windows (duplicates share one Increment).
+          significant_fields: fields whose change marks a row updated
+            (default: all fields).
+          fields: fields materialized into ``values`` (default: all;
+            pass ``[]`` for keys/kinds only).
+
+        Returns:
+          list[Increment] aligned with ``pairs`` (values at t1, zeroed
+          for deleted rows).
+
+        Raises:
+          KeyError: an unknown field name.
         """
         sig = (list(significant_fields) if significant_fields is not None
                else list(self.fields))
@@ -647,11 +933,26 @@ class VersionedStore:
 
     # -- compaction (production housekeeping; paper §III.E leaves retention
     # to "a cron job" — at fleet scale the cell log needs real compaction) --
-    def compact(self, before_ts: Timestamp, *, label: str = "") -> dict:
+    def compact(self, before_ts: Timestamp, *, label: str = "",
+                path: str | None = None) -> dict:
         """Collapse every row's cell history with ts <= before_ts into a
         single base cell at before_ts. Versions > before_ts are preserved
         exactly; get_version(t) for t >= before_ts is unchanged (older
-        pinned versions are the retention cost, as with any compaction)."""
+        pinned versions are the retention cost, as with any compaction).
+
+        Args:
+          before_ts: compaction horizon (inclusive).
+          label: label for the synthetic base release in ``versions``.
+          path: optional store directory — when given, the on-disk segments
+            are rewritten too (covered segments replaced by a base segment,
+            segments entirely above ``before_ts`` retained untouched; see
+            ``segments.compact_on_disk``).
+
+        Returns:
+          dict with ``cells_dropped`` / ``versions_kept`` and, when ``path``
+          is given, the on-disk rewrite stats (``segments_written``,
+          ``segments_retained``, ``bytes_written``, ...).
+        """
         dropped = 0
         for col in list(self.fields.values()) + [self.exists_log]:
             vals, tss, ptr = col.csr(self.n_rows) if isinstance(col, _CellLog) \
@@ -683,121 +984,70 @@ class VersionedStore:
                            n_entries=n_base, n_new=n_base, n_updated=0,
                            n_deleted=0)
         self.versions = [base] + kept
+        # the seed carries the pre-compaction content digest forward, so
+        # divergent histories stay distinguishable after compaction too
+        self._rechain_digests(hashlib.sha256(
+            f"compact|{before_ts}|{self._history_digest}".encode())
+            .hexdigest()[:16])
         self._invalidate_log()
-        return {"cells_dropped": dropped, "versions_kept": len(kept) + 1}
-
-    # -- persistence with delta-packed cell segments (§III.B compression) ----
-    def save(self, path: str) -> dict:
-        os.makedirs(path, exist_ok=True)
-        meta = {
-            "name": self.name,
-            "schema": [dataclasses.asdict(f) for f in self.schema.values()],
-            "n_rows": self.n_rows,
-            "keys": [k.decode("latin1") for k in self.row_keys],
-            "versions": [dataclasses.asdict(v) for v in self.versions],
-        }
-        arrays: dict[str, np.ndarray] = {}
-        stats = {"raw_bytes": 0, "packed_bytes": 0}
-        for name, col in self.fields.items():
-            vals, tss, ptr = col.log.csr(self.n_rows)
-            packed, pmeta = _pack_cells(vals, ptr)
-            arrays[f"f:{name}:vals"] = packed
-            arrays[f"f:{name}:ts"] = tss
-            arrays[f"f:{name}:ptr"] = ptr
-            meta.setdefault("pack", {})[name] = pmeta
-            stats["raw_bytes"] += vals.nbytes
-            stats["packed_bytes"] += packed.nbytes
-        ev, ets, eptr = self.exists_log.csr(self.n_rows)
-        arrays["exists:vals"], arrays["exists:ts"], arrays["exists:ptr"] = ev, ets, eptr
-        np.savez_compressed(os.path.join(path, "cells.npz"), **arrays)
-        with open(os.path.join(path, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        stats["disk_bytes"] = os.path.getsize(os.path.join(path, "cells.npz"))
+        stats = {"cells_dropped": dropped, "versions_kept": len(kept) + 1}
+        if path is not None:
+            from . import segments
+            stats.update(segments.compact_on_disk(self, path, before_ts))
         return stats
 
+    # -- persistence: segmented, append-only layout (core/segments.py) -------
+    def save(self, path: str, *, force_full: bool = False) -> dict:
+        """Persist to the segmented on-disk layout at ``path``.
+
+        Incremental when the directory already holds a manifest that is a
+        prefix of this store (same name/schema/keys/version history): only
+        cells newer than the manifest's ``saved_through_ts`` are written,
+        one segment per changed field — bytes written are O(new cells),
+        independent of total history size. Anything else (first save,
+        post-compaction, divergent history, ``force_full=True``) is a full
+        rewrite that also migrates/removes legacy monolithic snapshots.
+
+        Args:
+          path: store directory (created if missing).
+          force_full: skip the incremental check and rewrite everything.
+
+        Returns:
+          dict with ``mode`` ("incremental" | "full"), ``segments_written``,
+          ``bytes_written`` (segments + manifest written by THIS call),
+          ``raw_bytes`` / ``packed_bytes`` (pre/post chain-packing sizes of
+          the written cells), and ``disk_bytes`` (total store footprint).
+        """
+        from . import segments
+        return segments.save_store(self, path, force_full=force_full)
+
     @classmethod
-    def load(cls, path: str) -> "VersionedStore":
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
-        data = np.load(os.path.join(path, "cells.npz"))
-        st = cls(meta["name"], [FieldSchema(**f) for f in meta["schema"]],
-                 capacity=max(16, meta["n_rows"]))
-        st.n_rows = meta["n_rows"]
-        st.row_keys = [k.encode("latin1") for k in meta["keys"]]
-        st.key_to_row = {k: i for i, k in enumerate(st.row_keys)}
-        st.versions = [VersionInfo(**v) for v in meta["versions"]]
-        for name, col in st.fields.items():
-            ptr = data[f"f:{name}:ptr"]
-            vals = _unpack_cells(data[f"f:{name}:vals"], ptr,
-                                 meta["pack"][name], col.schema)
-            tss = data[f"f:{name}:ts"]
-            rows = np.repeat(np.arange(st.n_rows, dtype=np.int32), np.diff(ptr))
-            col.log._csr = (vals, tss, rows)
-            col.log._row_ptr = ptr
-            col.log._n_rows_at_build = st.n_rows
-            # rebuild head = select at +inf
-            hv, found = col.log.select_at(st.n_rows, TS_MAX)
-            col.head_vals[: st.n_rows] = hv
-            col.head_has[: st.n_rows] = found
-            if found.any():
-                col.head_fp[np.nonzero(found)[0]] = kops.fingerprint_rows(hv[found])
-        eptr = data["exists:ptr"]
-        erows = np.repeat(np.arange(st.n_rows, dtype=np.int32), np.diff(eptr))
-        st.exists_log._csr = (data["exists:vals"], data["exists:ts"], erows)
-        st.exists_log._row_ptr = eptr
-        st.exists_log._n_rows_at_build = st.n_rows
-        st._exists_head[: st.n_rows] = st.exists_at(TS_MAX)
-        st._invalidate_log()
-        return st
+    def load(cls, path: str, *, lazy: bool = True) -> "VersionedStore":
+        """Open a store directory (segmented manifest, or a legacy
+        monolithic snapshot for backward compatibility).
+
+        Args:
+          path: directory written by ``save`` (or a legacy snapshot).
+          lazy: when True (default), segment files are only stat-checked
+            (existence + exact size, so torn writes fail fast) and attached
+            as pending handles — their cells are read the first time a
+            query's timestamp bound reaches them, and head state is rebuilt
+            on the first mutation. ``lazy=False`` materializes everything
+            eagerly (the old behavior).
+
+        Returns:
+          A fully functional VersionedStore.
+
+        Raises:
+          FileNotFoundError: no manifest or legacy snapshot at ``path``.
+          segments.CorruptSegmentError: a listed segment is missing or
+            truncated (lazy) / fails its checksum (on read).
+        """
+        from . import segments
+        return segments.load_store(cls, path, lazy=lazy)
 
     # -- distribution ---------------------------------------------------------
     def shard_spec(self):
         """Rows (and log cells) shard over the mesh 'data' axis."""
         from jax.sharding import PartitionSpec as P
         return P("data", None)
-
-
-def _pack_cells(vals: np.ndarray, ptr: np.ndarray) -> tuple[np.ndarray, dict]:
-    """Delta-pack a CSR cell array: within each row chain, cells after the
-    first are stored as deltas vs the previous cell (delta_codec kernel),
-    with integer narrowing when the whole segment allows it."""
-    if len(vals) == 0:
-        return vals, {"mode": "raw", "dtype": vals.dtype.name}
-    first_of_row = np.zeros(len(vals), bool)
-    first_of_row[ptr[:-1][ptr[:-1] < len(vals)]] = True
-    prev = np.roll(vals, 1, axis=0)
-    prev[first_of_row] = 0  # first cell packs against zero (raw)
-    delta, _stat = kops.delta_pack(jnp.asarray(vals), jnp.asarray(prev))
-    delta = np.asarray(delta)
-    meta = {"mode": "delta", "dtype": vals.dtype.name}
-    if np.issubdtype(vals.dtype, np.integer) and vals.dtype.itemsize >= 4:
-        maxabs = int(np.abs(delta).max()) if delta.size else 0
-        narrow = kops.narrow_dtype(maxabs)
-        if np.dtype(narrow) != vals.dtype:
-            delta = delta.astype(narrow)
-            meta["narrow"] = np.dtype(narrow).name
-    return delta, meta
-
-
-def _unpack_cells(packed: np.ndarray, ptr: np.ndarray, meta: dict,
-                  schema: FieldSchema) -> np.ndarray:
-    if meta["mode"] == "raw" or len(packed) == 0:
-        return packed.astype(schema.np_dtype)
-    delta = packed.astype(meta["dtype"]) if "narrow" in meta else packed
-    if np.issubdtype(np.dtype(meta["dtype"]), np.floating):
-        delta = delta.view(meta["dtype"]) if delta.dtype != np.dtype(meta["dtype"]) else delta
-    # vectorized chain reconstruction: one pass per chain depth (chains are
-    # short — one cell per version the row changed in)
-    out = delta.copy()
-    lens = np.diff(ptr)
-    max_depth = int(lens.max()) if len(lens) else 0
-    is_float = np.issubdtype(np.dtype(meta["dtype"]), np.floating)
-    ib = {4: np.int32, 2: np.int16}.get(np.dtype(meta["dtype"]).itemsize, np.int32)
-    for depth in range(1, max_depth):
-        rows = np.nonzero(lens > depth)[0]
-        idx = ptr[rows] + depth
-        if is_float:
-            out[idx] = (out[idx].view(ib) ^ out[idx - 1].view(ib)).view(out.dtype)
-        else:
-            out[idx] = out[idx] + out[idx - 1]
-    return out.astype(schema.np_dtype)

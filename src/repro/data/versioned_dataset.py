@@ -65,6 +65,7 @@ class VersionedCorpus:
         # find which docs actually changed (fingerprint against head)
         from repro.kernels import ops as kops
         fp = kops.fingerprint_rows(texts)
+        self.store.rebuild_heads(["text"])  # stale after a lazy load
         col = self.store.fields["text"]
         changed_keys = {}
         for i, k in enumerate(keys):

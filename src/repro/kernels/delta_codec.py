@@ -8,6 +8,15 @@ exponent/mantissa bytes zero out, which downstream byte-level entropy coding
 exploits). Both directions are single-pass streaming VPU kernels; pack
 additionally emits the per-tile max |delta| so the host can narrow int32
 deltas to int16/int8 segments.
+
+On-disk chain format (used by ``core/segments.py`` segment files): cells
+are sorted by (row, ts); within each row's run ("chain") the first cell is
+packed against zero (i.e. stored raw) and every later cell against its
+predecessor. Chains never cross a segment boundary, so every segment file
+is self-contained and can be decoded without any other segment — the
+property that makes lazy, per-timestamp-range loading possible.
+``chain_pack`` / ``chain_unpack`` are the host-facing wrappers around the
+``delta_pack`` / ``delta_unpack`` kernels implementing that format.
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from . import ref
@@ -127,3 +137,82 @@ def narrow_dtype(maxabs: int, base=jnp.int32):
     if maxabs < 32768:
         return jnp.int16
     return base
+
+
+# -- host-facing chain codec (the on-disk segment cell format) ---------------
+
+def chain_pack(vals: np.ndarray, rows: np.ndarray) -> tuple[np.ndarray, dict]:
+    """Delta-pack a (row, ts)-sorted cell run for on-disk storage.
+
+    Args:
+      vals: (C, W) cell values, sorted so equal-row cells are adjacent and
+        in ascending ts order within the row ("chains").
+      rows: (C,) row index of each cell (defines the chain boundaries).
+
+    Returns:
+      (packed, meta): ``packed`` has the same shape as ``vals`` — the first
+      cell of each chain raw, later cells as deltas vs their predecessor
+      (arithmetic for ints, XOR lanes for floats, via the ``delta_pack``
+      kernel). Integer deltas are narrowed to int8/int16 when the whole run
+      allows it. ``meta`` records ``mode`` ("raw" for empty input, else
+      "delta"), the original ``dtype`` name, and optionally ``narrow``.
+    """
+    if len(vals) == 0:
+        return vals.copy(), {"mode": "raw", "dtype": vals.dtype.name}
+    first = np.ones(len(rows), bool)
+    first[1:] = rows[1:] != rows[:-1]
+    prev = np.roll(vals, 1, axis=0)
+    prev[first] = 0  # chain heads pack against zero (stored raw)
+    # pad the cell count to a power-of-two bucket: every incremental save
+    # has a unique cell count, and an unbucketed call would re-trace the
+    # jitted kernel per save (zero rows delta to zero, so results and the
+    # narrowing stat are unaffected)
+    n = len(vals)
+    n_pad = max(512, 1 << (n - 1).bit_length())
+    if n_pad != n:
+        pad = ((0, n_pad - n), (0, 0))
+        vals_in = np.pad(vals, pad)
+        prev_in = np.pad(prev, pad)
+    else:
+        vals_in, prev_in = vals, prev
+    delta, _stat = delta_pack(jnp.asarray(vals_in), jnp.asarray(prev_in))
+    delta = np.asarray(delta)[:n]
+    meta = {"mode": "delta", "dtype": vals.dtype.name}
+    if np.issubdtype(vals.dtype, np.integer) and vals.dtype.itemsize >= 4:
+        maxabs = int(np.abs(delta.astype(np.int64)).max()) if delta.size else 0
+        narrow = narrow_dtype(maxabs)
+        if np.dtype(narrow) != vals.dtype:
+            delta = delta.astype(narrow)
+            meta["narrow"] = np.dtype(narrow).name
+    return delta, meta
+
+
+def chain_unpack(packed: np.ndarray, rows: np.ndarray, meta: dict,
+                 out_dtype: np.dtype) -> np.ndarray:
+    """Invert ``chain_pack``: reconstruct (C, W) cell values.
+
+    Chains are rebuilt one depth level per pass (chains are short — one
+    cell per version the row changed in), so the cost is
+    O(cells x max_chain_depth / chain_count) vectorized steps.
+
+    Raises:
+      KeyError/TypeError: if ``meta`` does not come from ``chain_pack``.
+    """
+    if meta["mode"] == "raw" or len(packed) == 0:
+        return packed.astype(out_dtype)
+    stored = np.dtype(meta["dtype"])
+    delta = packed.astype(stored) if "narrow" in meta else packed
+    out = delta.copy()
+    first = np.ones(len(rows), bool)
+    first[1:] = rows[1:] != rows[:-1]
+    starts = np.nonzero(first)[0]
+    lens = np.diff(np.append(starts, len(rows)))
+    is_float = np.issubdtype(stored, np.floating)
+    ib = {4: np.int32, 2: np.int16}.get(stored.itemsize, np.int32)
+    for depth in range(1, int(lens.max()) if len(lens) else 0):
+        idx = starts[lens > depth] + depth
+        if is_float:
+            out[idx] = (out[idx].view(ib) ^ out[idx - 1].view(ib)).view(out.dtype)
+        else:
+            out[idx] = out[idx] + out[idx - 1]
+    return out.astype(out_dtype)

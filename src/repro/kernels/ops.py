@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .batched_select import batched_masked_cumsum, batched_version_select
-from .delta_codec import delta_pack, delta_unpack, narrow_dtype
+from .delta_codec import (chain_pack, chain_unpack, delta_pack, delta_unpack,
+                          narrow_dtype)
 from .fingerprint import fingerprint
 from .flash_attention import flash_attention
 from .masked_merge import masked_merge
@@ -20,7 +21,8 @@ from .version_select import masked_cumsum, version_select
 __all__ = [
     "fingerprint", "fingerprint_rows", "masked_cumsum", "version_select",
     "batched_masked_cumsum", "batched_version_select",
-    "delta_pack", "delta_unpack", "narrow_dtype", "masked_merge",
+    "delta_pack", "delta_unpack", "chain_pack", "chain_unpack",
+    "narrow_dtype", "masked_merge",
     "flash_attention", "to_int_lanes", "ref",
 ]
 

@@ -1,5 +1,6 @@
 """Serving: batched engine, sampling, bucketed scheduler, and the GeStore
-version-materialization service (gestore_service.py)."""
-from .gestore_service import GeStoreService, VersionRequest
+version-materialization service (gestore_service.py) with its tiered
+store-memory manager."""
+from .gestore_service import GeStoreService, TieredStorePool, VersionRequest
 
-__all__ = ["GeStoreService", "VersionRequest"]
+__all__ = ["GeStoreService", "TieredStorePool", "VersionRequest"]

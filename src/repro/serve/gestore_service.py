@@ -13,14 +13,26 @@ Materialized views are memoized in an LRU *plan cache* keyed on
 age out naturally without explicit invalidation hooks. Per-host state is
 just the queue + cache; a fleet scales this horizontally exactly like
 serve/scheduler.py does for token serving.
+
+Tiered memory management: a host serving hundreds of stores cannot keep
+every superlog device-resident, nor every cell log in host RAM. When the
+service is given a memory budget it wraps its stores in a
+``TieredStorePool`` that tracks per-store resident bytes
+(``VersionedStore.nbytes()``) and demotes the coldest stores one tier at a
+time — device -> host (drop the fused superlog) then host -> disk
+(segmented ``save()`` + drop the store object). A spilled store is
+transparently reopened with a lazy ``load()`` on next access, and its
+``log_epoch`` is floored above the spilled epoch so plan-cache entries from
+before the spill can never alias a post-spill mutation.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from collections import OrderedDict
 from concurrent.futures import Future
-from typing import Mapping, Sequence
+from typing import Iterator, Mapping, Sequence
 
 from repro.core.store import VersionedStore, VersionView
 
@@ -42,6 +54,164 @@ class VersionRequest:
         return (self.store, self.fields, self.key_filter, self.include_deleted)
 
 
+class TieredStorePool:
+    """Mapping-like store pool enforcing a resident-memory budget.
+
+    Tracks per-store resident bytes and evicts the least-recently-used
+    stores tier by tier until the total fits ``budget_bytes``:
+
+      1. device -> host: drop the fused superlog (cheap; the next batched
+         query rebuilds it from the host CSR).
+      2. host -> disk: segmented ``save()`` to ``spill_root/<store>`` and
+         drop the in-memory store. The next ``pool[name]`` reopens it with
+         a lazy load, so only the segments a query touches are re-read.
+
+    The pool operates on the LIVE backing dict when given one (including a
+    GeStore facade's ``stores`` dict): spilling removes the entry from
+    that dict too, so the memory is actually reclaimable and other holders
+    of the dict see the store disappear instead of mutating an orphan.
+    With a GeStore facade, spills go to ``GeStore.store_path(name)`` — the
+    same directory ``flush()``/``open_store()`` use — so the facade and
+    the pool always agree on where a spilled store lives.
+
+    Epoch safety: before spilling (or replacing via ``add``), the store's
+    ``log_epoch`` is recorded and the next store served under that name is
+    floored above it, so any cache keyed on ``(store, log_epoch)`` (e.g.
+    the service plan cache) can never confuse old content with new.
+    """
+
+    def __init__(self, stores, *, budget_bytes: int | None = None,
+                 spill_root: str | None = None):
+        """Args:
+          stores: a GeStore facade or {name: VersionedStore} mapping. A
+            dict (or a facade's dict) is shared live; other mappings are
+            snapshotted.
+          budget_bytes: total resident (host+device) byte budget enforced
+            by ``enforce()``; None disables eviction.
+          spill_root: directory for host->disk spills; None limits
+            eviction to the device->host tier unless a GeStore facade
+            supplies its own store paths.
+        """
+        self._facade = stores if hasattr(stores, "store_path") else None
+        backing = getattr(stores, "stores", stores)
+        self._stores: dict[str, VersionedStore] = (
+            backing if isinstance(backing, dict) else dict(backing))
+        self.budget_bytes = budget_bytes
+        self.spill_root = spill_root
+        self._spilled: dict[str, str] = {}        # name -> save path
+        self._epoch_floor: dict[str, int] = {}
+        self._lru: OrderedDict[str, None] = OrderedDict(
+            (n, None) for n in self._stores)
+        self.stats = {"demotions": 0, "spills": 0, "reloads": 0}
+
+    def _spill_path(self, name: str) -> str | None:
+        if self._facade is not None:
+            return self._facade.store_path(name)
+        if self.spill_root is not None:
+            return os.path.join(self.spill_root, _fs_name(name))
+        return None
+
+    def _apply_floor(self, name: str, st: VersionedStore) -> VersionedStore:
+        floor = self._epoch_floor.get(name, 0)
+        if st._log_epoch < floor:
+            st._log_epoch = floor
+        return st
+
+    # -- mapping interface ----------------------------------------------------
+    def __getitem__(self, name: str) -> VersionedStore:
+        st = self._stores.get(name)
+        if st is None:
+            path = self._spilled.pop(name, None)
+            if path is None:
+                raise KeyError(name)
+            st = self._apply_floor(name, VersionedStore.load(path, lazy=True))
+            self._stores[name] = st
+            self.stats["reloads"] += 1
+        elif name in self._spilled:
+            # someone else (e.g. GeStore.open_store) reloaded it into the
+            # shared dict first; adopt it and keep the epoch guarantee
+            del self._spilled[name]
+            self._apply_floor(name, st)
+        self._lru[name] = None
+        self._lru.move_to_end(name)
+        return st
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._stores or name in self._spilled
+
+    def __iter__(self) -> Iterator[str]:
+        yield from {**dict.fromkeys(self._stores),
+                    **dict.fromkeys(self._spilled)}
+
+    def __len__(self) -> int:
+        return len(self._stores) + len(self._spilled)
+
+    def keys(self):
+        return list(self)
+
+    def add(self, name: str, store: VersionedStore) -> None:
+        """Register a store created after pool construction. Replacing an
+        existing (or spilled) name advances the epoch floor past the old
+        store, so plan-cache entries for it can never serve the new one."""
+        old = self._stores.get(name)
+        if old is not None:
+            self._epoch_floor[name] = max(self._epoch_floor.get(name, 0),
+                                          old.log_epoch + 1)
+        self._stores[name] = self._apply_floor(name, store)
+        self._spilled.pop(name, None)
+        self._lru[name] = None
+
+    # -- accounting + eviction ------------------------------------------------
+    def resident_bytes(self) -> int:
+        """Total host+device bytes of every in-memory store."""
+        return sum(sum(st.nbytes().values()) for st in self._stores.values())
+
+    def enforce(self) -> int:
+        """Evict coldest-first until within budget; returns evictions
+        performed (a demotion and a spill each count one). Resident bytes
+        are computed once and maintained incrementally, so one call is one
+        walk over the pool, not O(stores) walks."""
+        if self.budget_bytes is None:
+            return 0
+        per_store = {name: sum(st.nbytes().values())
+                     for name, st in self._stores.items()}
+        total = sum(per_store.values())
+        n = 0
+        # coldest first; stores never served via the pool come last
+        order = list(self._lru) + [m for m in self._stores
+                                   if m not in self._lru]
+        for name in order:
+            if total <= self.budget_bytes:
+                break
+            st = self._stores.get(name)
+            if st is None:
+                continue
+            if st._superlog is not None:            # tier 1: device -> host
+                st.drop_superlog()
+                self.stats["demotions"] += 1
+                n += 1
+                per_store[name] = sum(st.nbytes().values())
+                total = sum(per_store.values())
+                if total <= self.budget_bytes:
+                    break
+            path = self._spill_path(name)
+            if path is not None:                    # tier 2: host -> disk
+                st.save(path)
+                self._epoch_floor[name] = st.log_epoch + 1
+                self._spilled[name] = path
+                del self._stores[name]
+                self._lru.pop(name, None)
+                total -= per_store.pop(name, 0)
+                self.stats["spills"] += 1
+                n += 1
+        return n
+
+
+def _fs_name(name: str) -> str:
+    from repro.core.segments import fs_name
+    return fs_name(name)
+
+
 class GeStoreService:
     """Concurrent batched version materialization over a set of stores.
 
@@ -49,13 +219,38 @@ class GeStoreService:
     queue, batching per store. ``materialize`` is the synchronous
     convenience wrapper. Served views are memoized and shared across
     clients, so their arrays are read-only — copy before mutating.
+
+    With ``memory_budget_bytes`` (and optionally ``spill_root``) set, the
+    stores are wrapped in a ``TieredStorePool`` and the budget is enforced
+    after every flush — cold stores demote device -> host -> disk and
+    reload lazily from their segments on the next request for them.
     """
 
     def __init__(self, stores, *, max_batch: int = 64,
-                 plan_cache_size: int = 16, max_views_per_plan: int = 256):
-        # accept a GeStore facade, or any {name: VersionedStore} mapping
-        self._stores: Mapping[str, VersionedStore] = getattr(
-            stores, "stores", stores)
+                 plan_cache_size: int = 16, max_views_per_plan: int = 256,
+                 memory_budget_bytes: int | None = None,
+                 spill_root: str | None = None):
+        """Args:
+          stores: a GeStore facade, {name: VersionedStore} mapping, or an
+            existing TieredStorePool.
+          max_batch: max distinct timestamps per get_versions call.
+          plan_cache_size: LRU capacity in (store, log_epoch) plans.
+          max_views_per_plan: LRU capacity of views within one plan.
+          memory_budget_bytes / spill_root: tiered-memory knobs (see
+            TieredStorePool); both None = no eviction (seed behavior).
+        """
+        backing = getattr(stores, "stores", stores)
+        if isinstance(backing, TieredStorePool):
+            self.pool: TieredStorePool | None = backing
+        elif memory_budget_bytes is not None or spill_root is not None:
+            # pass the original object: a GeStore facade carries the spill
+            # paths its own flush()/open_store() use
+            self.pool = TieredStorePool(stores,
+                                        budget_bytes=memory_budget_bytes,
+                                        spill_root=spill_root)
+        else:
+            self.pool = None
+        self._stores: Mapping[str, VersionedStore] = self.pool or backing
         self.max_batch = max_batch
         self.plan_cache_size = plan_cache_size
         self.max_views_per_plan = max_views_per_plan
@@ -71,6 +266,17 @@ class GeStoreService:
     def submit(self, store: str, ts: int, *, fields: Sequence[str] | None = None,
                key_filter: str | None = None,
                include_deleted: bool = False) -> "Future[VersionView]":
+        """Enqueue one version-materialization request (thread-safe).
+
+        Args:
+          store: store name; ts: version timestamp; fields/key_filter/
+            include_deleted: forwarded to ``VersionedStore.get_versions``.
+
+        Returns:
+          A Future resolved by a later ``flush()`` with a shared, read-only
+          VersionView (copy before mutating). The Future carries
+          ``KeyError`` for an unknown store and any store-level error.
+        """
         req = VersionRequest(store, int(ts),
                              tuple(fields) if fields is not None else None,
                              key_filter, include_deleted)
@@ -81,6 +287,9 @@ class GeStoreService:
         return fut
 
     def materialize(self, requests: Sequence[VersionRequest]) -> list[VersionView]:
+        """Synchronous convenience: submit every request, flush once, and
+        return the views aligned with ``requests``. Raises whatever the
+        underlying store raised for the failing request, if any."""
         futs = [self.submit(r.store, r.ts, fields=r.fields,
                             key_filter=r.key_filter,
                             include_deleted=r.include_deleted)
@@ -157,4 +366,6 @@ class GeStoreService:
                 for _, fut in items:
                     if not fut.done() and fut.set_running_or_notify_cancel():
                         fut.set_exception(e)
+        if self.pool is not None:
+            self.pool.enforce()
         return len(pending)

@@ -1,0 +1,365 @@
+"""Segmented on-disk storage (core/segments.py): incremental save bytes,
+lazy load, crash safety, dtype round-trips through compaction, legacy
+snapshot migration, and GeStore flush/reopen wiring."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import segments
+from repro.core.store import FieldSchema, VersionedStore
+
+SCHEMA = [FieldSchema("a", 4, "int32"), FieldSchema("b", 2, "float32"),
+          FieldSchema("c", 3, "int16"), FieldSchema("d", 1, "int8")]
+
+
+def mk_table(rng, n):
+    return {"a": rng.integers(0, 1 << 20, (n, 4)).astype(np.int32),
+            "b": rng.normal(size=(n, 2)).astype(np.float32),
+            "c": rng.integers(-300, 300, (n, 3)).astype(np.int16),
+            "d": rng.integers(-5, 5, (n, 1)).astype(np.int8)}
+
+
+def mk_store(rng, n_releases=4, n=30):
+    st = VersionedStore("t", SCHEMA)
+    keys = [f"k{i}" for i in range(n)]
+    for v in range(1, n_releases + 1):
+        st.update(v * 10, keys, mk_table(rng, n))
+    return st
+
+
+def assert_equal_versions(a: VersionedStore, b: VersionedStore, ts_list):
+    for t in ts_list:
+        va, vb = a.get_version(t), b.get_version(t)
+        assert va.keys == vb.keys, t
+        for f in va.values:
+            assert np.array_equal(va.values[f], vb.values[f]), (t, f)
+
+
+def manifest(path):
+    with open(os.path.join(path, segments.MANIFEST_NAME)) as f:
+        return json.load(f)
+
+
+def seg_index(path):
+    return segments.read_segment_index(path, manifest(path))
+
+
+# -- incremental save --------------------------------------------------------
+
+def test_incremental_save_bytes_independent_of_history(rng, tmp_path):
+    """The acceptance criterion: appending one release and saving writes
+    only the new segments — bytes do not grow with history depth."""
+    n = 60
+    st = VersionedStore("t", SCHEMA)
+    keys = [f"k{i}" for i in range(n)]
+    st.update(10, keys, mk_table(rng, n))
+    d = str(tmp_path / "store")
+    first = st.save(d)
+    assert first["mode"] == "full"
+
+    inc_bytes = []
+    for v in range(2, 26):
+        tbl = mk_table(rng, n)   # full churn: every release same size
+        st.update(v * 10, keys, tbl)
+        stats = st.save(d)
+        assert stats["mode"] == "incremental"
+        # exactly one new segment per field log (no exists transitions)
+        assert stats["segments_written"] == len(SCHEMA)
+        inc_bytes.append(stats["bytes_written"])
+    # per-release bytes stay flat: the last save is no bigger than the
+    # early ones (2x slack for manifest growth / compression jitter)
+    assert max(inc_bytes[-3:]) < 2 * max(inc_bytes[:3])
+    # and a full rewrite of the 25-release history dwarfs one increment
+    full = st.save(str(tmp_path / "rw"), force_full=True)
+    assert full["bytes_written"] > 5 * max(inc_bytes)
+
+
+def test_incremental_save_roundtrip(rng, tmp_path):
+    st = mk_store(rng, n_releases=1)
+    d = str(tmp_path / "s")
+    st.save(d)
+    keys = [f"k{i}" for i in range(30)]
+    for v in (2, 3, 4):
+        st.update(v * 10, keys[: 30 - v], mk_table(rng, 30 - v))  # + deletes
+        st.save(d)
+    st2 = VersionedStore.load(d)
+    assert_equal_versions(st, st2, [10, 20, 30, 40, 45])
+    # the reopened store keeps saving incrementally
+    st2.update(50, keys[:5], {k: v[:5] for k, v in mk_table(rng, 30).items()},
+               full_release=False)
+    stats = st2.save(d)
+    assert stats["mode"] == "incremental"
+    assert_equal_versions(st2, VersionedStore.load(d), [10, 40, 50])
+
+
+def test_save_to_foreign_dir_is_full_rewrite(rng, tmp_path):
+    st = mk_store(rng)
+    other = mk_store(rng, n_releases=2)
+    d = str(tmp_path / "s")
+    other.save(d)
+    stats = st.save(d)   # same name but divergent history -> rewrite
+    assert stats["mode"] == "full"
+    assert_equal_versions(st, VersionedStore.load(d), [10, 20, 30, 40])
+
+
+# -- lazy load ---------------------------------------------------------------
+
+def test_lazy_load_defers_segment_reads(rng, tmp_path):
+    st = mk_store(rng)
+    d = str(tmp_path / "s")
+    st.save(d)
+    st2 = VersionedStore.load(d)   # lazy by default
+    pending = {n: len(c.log._pending) for n, c in st2.fields.items()}
+    assert all(v == 1 for v in pending.values()), pending
+    # a narrow single-version query touches only its own field + EXISTS
+    v = st2.get_version(20, fields=["a"])
+    assert len(st2.fields["a"].log._pending) == 0
+    assert len(st2.fields["b"].log._pending) == 1   # untouched
+    want = st.get_version(20, fields=["a"])
+    assert v.keys == want.keys
+    assert np.array_equal(v.values["a"], want.values["a"])
+
+
+def test_lazy_load_update_change_detection(rng, tmp_path):
+    """Heads rebuild lazily: an identical re-release after a lazy load must
+    detect zero churn (fingerprints reconstructed from segments)."""
+    st = mk_store(rng, n_releases=2)
+    d = str(tmp_path / "s")
+    st.save(d)
+    st2 = VersionedStore.load(d)
+    head = st.get_version(20)
+    info = st2.update(30, [k.decode() for k in head.keys],
+                      {f: head.values[f] for f in st.fields})
+    assert (info.n_new, info.n_updated, info.n_deleted) == (0, 0, 0)
+
+
+def test_eager_load_matches_lazy(rng, tmp_path):
+    st = mk_store(rng)
+    d = str(tmp_path / "s")
+    st.save(d)
+    assert_equal_versions(VersionedStore.load(d, lazy=False),
+                          VersionedStore.load(d, lazy=True),
+                          [10, 20, 30, 40])
+
+
+# -- compaction on disk ------------------------------------------------------
+
+def test_compact_on_disk_roundtrip_and_retained_tail(rng, tmp_path):
+    st = VersionedStore("t", SCHEMA)
+    keys = [f"k{i}" for i in range(25)]
+    d = str(tmp_path / "s")
+    for v in range(1, 6):
+        st.update(v * 10, keys, mk_table(rng, 25))
+        st.save(d)                      # one segment per field per release
+    st.delete(55, ["k3"])
+    st.save(d)
+    before = {t: st.get_version(t) for t in (30, 40, 50, 55)}
+    stats = st.compact(30, path=d)
+    assert stats["cells_dropped"] > 0
+    assert stats["segments_retained"] > 0    # tail segments not rewritten
+    segs = seg_index(d)
+    assert "base" in {s.kind for s in segs}
+    assert all(s.ts0 >= 30 for s in segs)
+    st2 = VersionedStore.load(d)
+    for t in (30, 40, 50, 55):
+        after = st2.get_version(t)
+        assert after.keys == before[t].keys, t
+        for f in after.values:
+            assert np.array_equal(after.values[f], before[t].values[f]), (t, f)
+    # post-compaction saves are incremental again
+    st2.update(60, keys[:4], {k: v[:4] for k, v in mk_table(rng, 25).items()},
+               full_release=False)
+    assert st2.save(d)["mode"] == "incremental"
+
+
+# -- crash safety ------------------------------------------------------------
+
+def test_manifest_rejects_truncated_segment(rng, tmp_path):
+    st = mk_store(rng)
+    d = str(tmp_path / "s")
+    st.save(d)
+    p = os.path.join(d, seg_index(d)[0].path)
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    with pytest.raises(segments.CorruptSegmentError, match="torn"):
+        VersionedStore.load(d)
+
+
+def test_manifest_rejects_missing_segment(rng, tmp_path):
+    st = mk_store(rng)
+    d = str(tmp_path / "s")
+    st.save(d)
+    os.remove(os.path.join(d, seg_index(d)[0].path))
+    with pytest.raises(segments.CorruptSegmentError, match="missing"):
+        VersionedStore.load(d)
+
+
+def test_bitflip_rejected_on_first_read(rng, tmp_path):
+    st = mk_store(rng)
+    d = str(tmp_path / "s")
+    st.save(d)
+    p = os.path.join(d, seg_index(d)[0].path)
+    blob = bytearray(open(p, "rb").read())
+    blob[-8] ^= 0xFF
+    with open(p, "wb") as f:
+        f.write(bytes(blob))
+    st2 = VersionedStore.load(d)   # size unchanged: lazy open succeeds
+    with pytest.raises(segments.CorruptSegmentError, match="sha256"):
+        st2.get_version(40)
+
+
+def test_uncommitted_index_tail_is_ignored_and_reclaimed(rng, tmp_path,
+                                                         monkeypatch):
+    """Crash between the index append and the manifest commit: the old
+    manifest's byte-offset prefix stays authoritative, and the next save
+    truncates the orphan tail before appending."""
+    st = mk_store(rng, n_releases=2)
+    d = str(tmp_path / "s")
+    st.save(d)
+    old_versions = [v.ts for v in st.versions]
+    keys = [f"k{i}" for i in range(30)]
+
+    # simulate the crash: run the segment+index writes, abort the manifest
+    st.update(30, keys, mk_table(rng, 30))
+    monkeypatch.setattr(segments, "write_manifest",
+                        lambda *a, **k: (_ for _ in ()).throw(OSError("boom")))
+    with pytest.raises(OSError):
+        st.save(d)
+    monkeypatch.undo()
+
+    st2 = VersionedStore.load(d)        # pre-crash state, tail ignored
+    assert [v.ts for v in st2.versions] == old_versions
+    assert_equal_versions(st, st2, [10, 20])
+
+    stats = st.save(d)                  # retry commits cleanly
+    assert stats["mode"] == "incremental"
+    assert_equal_versions(st, VersionedStore.load(d), [10, 20, 30])
+
+
+def test_interrupted_full_rewrite_keeps_previous_state(rng, tmp_path,
+                                                       monkeypatch):
+    """A crash mid-rewrite never touches the committed generation: the
+    previous manifest + index + segments stay fully loadable."""
+    st = mk_store(rng)
+    d = str(tmp_path / "s")
+    st.save(d)
+    pre = {t: st.get_version(t) for t in (20, 40)}
+    calls = {"n": 0}
+    real = segments.write_segment
+
+    def exploding(*a, **k):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise OSError("disk full")
+        return real(*a, **k)
+
+    monkeypatch.setattr(segments, "write_segment", exploding)
+    with pytest.raises(OSError):
+        st.save(d, force_full=True)
+    monkeypatch.undo()
+    st2 = VersionedStore.load(d)           # previous generation intact
+    for t in (20, 40):
+        got = st2.get_version(t)
+        assert got.keys == pre[t].keys
+        for f in got.values:
+            assert np.array_equal(got.values[f], pre[t].values[f]), (t, f)
+
+
+def test_interrupted_compact_keeps_previous_state_loadable(rng, tmp_path,
+                                                           monkeypatch):
+    """Compaction writes a new index generation and commits via the
+    manifest swap: a crash between them must leave the pre-compaction
+    store fully loadable."""
+    st = VersionedStore("t", SCHEMA)
+    keys = [f"k{i}" for i in range(20)]
+    d = str(tmp_path / "s")
+    for v in range(1, 6):
+        st.update(v * 10, keys, mk_table(rng, 20))
+        st.save(d)
+    pre = {t: st.get_version(t) for t in (20, 50)}
+    monkeypatch.setattr(segments, "write_manifest",
+                        lambda *a, **k: (_ for _ in ()).throw(OSError("boom")))
+    with pytest.raises(OSError):
+        st.compact(30, path=d)
+    monkeypatch.undo()
+    st2 = VersionedStore.load(d)           # previous manifest generation
+    for t in (20, 50):
+        got = st2.get_version(t)
+        assert got.keys == pre[t].keys
+        for f in got.values:
+            assert np.array_equal(got.values[f], pre[t].values[f]), (t, f)
+
+
+def test_store_dir_names_never_collide():
+    from repro.core.segments import store_dir_name
+    assert store_dir_name("a/b") != store_dir_name("a_b")
+    assert store_dir_name("plain-name.v2") == "plain-name.v2"
+
+
+def test_versioned_corpus_incremental_after_lazy_load(rng, tmp_path):
+    """Direct head readers (versioned_dataset change detection) must see
+    rebuilt heads after a lazy load — unchanged docs are not re-encoded."""
+    from repro.data.versioned_dataset import VersionedCorpus
+    c = VersionedCorpus()
+    docs = {f"d{i}": f"document body {i}" for i in range(12)}
+    c.add_release(10, docs)
+    d = str(tmp_path / "corpus")
+    c.store.save(d)
+    c2 = VersionedCorpus()
+    c2.store = VersionedStore.load(d)      # lazy: heads stale
+    docs2 = dict(docs)
+    docs2["d3"] = "changed!"
+    c2.incremental_release(10, 20, docs2)
+    assert c2.tokens_encoded_total == 1    # only the changed doc
+
+
+# -- legacy snapshot migration ----------------------------------------------
+
+def test_legacy_snapshot_loads_and_migrates(rng, tmp_path):
+    st = mk_store(rng)
+    d = str(tmp_path / "legacy")
+    segments.write_legacy_snapshot(st, d)
+    st2 = VersionedStore.load(d)       # legacy loader path
+    assert_equal_versions(st, st2, [10, 20, 30, 40])
+    stats = st2.save(d)                # first segmented save migrates
+    assert stats["mode"] == "full"
+    # the fix under test: no stale cells.npz/meta.json beside the manifest
+    assert not os.path.exists(os.path.join(d, "cells.npz"))
+    assert not os.path.exists(os.path.join(d, "meta.json"))
+    assert os.path.exists(os.path.join(d, segments.MANIFEST_NAME))
+    assert_equal_versions(st, VersionedStore.load(d), [10, 20, 30, 40])
+
+
+# -- GeStore wiring ----------------------------------------------------------
+
+def test_gestore_flush_and_reopen(rng, tmp_path):
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+
+    def fasta(n, seed):
+        r = np.random.default_rng(seed)
+        return "".join(
+            f">Q{i:03d} d\n" + "".join(r.choice(list("ACDEFGHIK"), 16)) + "\n"
+            for i in range(n))
+
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=32, desc_width=8))
+    root = str(tmp_path / "gs")
+    gs = core.GeStore(root, reg)
+    gs.add_release("up", 1, fasta(20, 1), parser_name="fasta")
+    gs.add_release("up", 2, fasta(22, 2), parser_name="fasta")
+    assert gs.flush()["up"]["mode"] == "full"
+    want = gs.stores["up"].get_version(2)
+
+    gs2 = core.GeStore(root, reg)      # autoload reopens persisted stores
+    got = gs2.stores["up"].get_version(2)
+    assert got.keys == want.keys
+    assert np.array_equal(got.values["sequence"], want.values["sequence"])
+    gs2.add_release("up", 3, fasta(23, 3), parser_name="fasta")
+    assert gs2.flush("up")["up"]["mode"] == "incremental"
+    # cache eviction never touches the persisted store
+    gs2.cache.evict(0)
+    assert os.path.exists(os.path.join(gs2.store_path("up"),
+                                       segments.MANIFEST_NAME))

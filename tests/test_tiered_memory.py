@@ -1,0 +1,118 @@
+"""Tiered memory manager (serve/gestore_service.TieredStorePool):
+device->host->disk eviction under a byte budget, transparent lazy reload,
+and the log_epoch safety floor for the plan cache."""
+import numpy as np
+
+from repro.core.store import FieldSchema, VersionedStore
+from repro.serve import GeStoreService, TieredStorePool
+from repro.serve.gestore_service import VersionRequest
+
+
+def mk_store(name, rng, n=120, releases=3):
+    st = VersionedStore(name, [FieldSchema("a", 8, "int32")])
+    keys = [f"{name}-k{i}" for i in range(n)]
+    for v in range(1, releases + 1):
+        st.update(v * 10, keys,
+                  {"a": rng.integers(0, 99, (n, 8)).astype(np.int32)})
+    return st
+
+
+def test_eviction_then_query_identical(rng, tmp_path):
+    stores = {"A": mk_store("A", rng), "B": mk_store("B", rng)}
+    want_a = stores["A"].get_version(20, fields=["a"])
+    want_b = stores["B"].get_version(30, fields=["a"])
+
+    svc = GeStoreService(stores, memory_budget_bytes=1,
+                         spill_root=str(tmp_path))
+    got_a = svc.materialize([VersionRequest("A", 20, ("a",))])[0]
+    got_b = svc.materialize([VersionRequest("B", 30, ("a",))])[0]
+    assert svc.pool.stats["spills"] >= 1
+    got_a2 = svc.materialize([VersionRequest("A", 20, ("a",))])[0]  # reload
+    assert svc.pool.stats["reloads"] >= 1
+    for got, want in ((got_a, want_a), (got_b, want_b), (got_a2, want_a)):
+        assert got.keys == want.keys
+        assert np.array_equal(got.values["a"], want.values["a"])
+
+
+def test_device_to_host_demotion(rng):
+    st = mk_store("C", rng)
+    want = st.get_version(20, fields=["a"])
+    svc = GeStoreService({"C": st}, memory_budget_bytes=1)  # no spill root
+    # multi-ts batch builds the fused superlog -> device-resident bytes
+    svc.materialize([VersionRequest("C", 20, ("a",)),
+                     VersionRequest("C", 30, ("a",))])
+    assert svc.pool.stats["demotions"] >= 1
+    assert st._superlog is None           # demoted, store still in memory
+    got = svc.materialize([VersionRequest("C", 20, ("a",))])[0]
+    assert np.array_equal(got.values["a"], want.values["a"])
+
+
+def test_no_budget_means_no_eviction(rng):
+    st = mk_store("D", rng)
+    svc = GeStoreService({"D": st})
+    assert svc.pool is None               # seed behavior preserved
+    svc.materialize([VersionRequest("D", 20, ("a",)),
+                     VersionRequest("D", 30, ("a",))])
+    assert st._superlog is not None
+
+
+def test_epoch_floor_survives_spill(rng, tmp_path):
+    pool = TieredStorePool({"E": mk_store("E", rng)}, budget_bytes=1,
+                           spill_root=str(tmp_path))
+    pre = pool["E"].log_epoch
+    assert pool.enforce() >= 1
+    assert "E" in pool and len(pool) == 1
+    post = pool["E"].log_epoch            # transparent reload
+    assert post > pre                     # (store, epoch) keys never alias
+
+
+def test_pool_accounting_and_add(rng, tmp_path):
+    pool = TieredStorePool({}, budget_bytes=None, spill_root=str(tmp_path))
+    assert pool.resident_bytes() == 0
+    st = mk_store("F", rng)
+    pool.add("F", st)
+    assert pool.resident_bytes() == sum(st.nbytes().values())
+    assert pool.enforce() == 0            # budget None: never evicts
+    assert set(pool.keys()) == {"F"}
+
+
+def test_gestore_facade_spill_then_mutate_serves_fresh_data(rng, tmp_path):
+    """The pool shares the facade's live dict: a spill removes the store
+    from GeStore.stores too, add_release reopens it from disk, and the
+    service serves the post-mutation value (never a stale spilled copy)."""
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=16, desc_width=4))
+    gs = core.GeStore(str(tmp_path / "gs"), reg)
+    gs.add_release("up", 1, ">A x\nACDE\n>B y\nACDF\n", parser_name="fasta")
+    svc = GeStoreService(gs, memory_budget_bytes=1)   # facade-supplied paths
+    v1 = svc.materialize([VersionRequest("up", 1)])[0]
+    assert svc.pool.stats["spills"] >= 1
+    assert "up" not in gs.stores                      # live dict shared
+    gs.add_release("up", 2, ">A x\nACDE\n>C z\nGGGG\n", parser_name="fasta")
+    v2 = svc.materialize([VersionRequest("up", 2)])[0]
+    assert sorted(v2.keys) == [b"A", b"C"]            # fresh, not stale
+    assert sorted(v1.keys) == [b"A", b"B"]
+
+
+def test_pool_add_replacing_name_advances_epoch_floor(rng):
+    st1 = mk_store("H", rng)
+    pool = TieredStorePool({"H": st1})
+    high = pool["H"].log_epoch
+    st2 = mk_store("H", rng, releases=1)              # fresh, lower epoch
+    assert st2.log_epoch < high
+    pool.add("H", st2)
+    assert pool["H"].log_epoch > high                 # no (name, epoch) alias
+
+
+def test_store_nbytes_tracks_superlog(rng):
+    st = mk_store("G", rng)
+    host_only = st.nbytes()
+    assert host_only["device"] == 0
+    st.get_versions([10, 20], fields=["a"])   # builds + uploads superlog
+    with_dev = st.nbytes()
+    assert with_dev["device"] > 0
+    st.drop_superlog()
+    assert st.nbytes()["device"] == 0

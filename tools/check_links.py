@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Check that relative markdown links resolve to real files.
+
+Usage: python tools/check_links.py README.md docs/ARCHITECTURE.md ...
+
+Only repo-local file links are checked: http(s)/mailto URLs, pure
+anchors, and paths that escape the repository root (e.g. GitHub web
+paths like ``../../actions/...`` used by CI badges) are skipped.
+Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_file(md_path: str) -> list[str]:
+    broken = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    with open(md_path) as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = os.path.normpath(os.path.join(base, target.split("#")[0]))
+        if not path.startswith(REPO_ROOT + os.sep):
+            continue  # escapes the repo (e.g. GitHub-web badge paths)
+        if not os.path.exists(path):
+            broken.append(f"{md_path}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    broken = []
+    for md in argv:
+        broken += check_file(md)
+    for b in broken:
+        print(b, file=sys.stderr)
+    if not broken:
+        print(f"ok: all repo-local links in {len(argv)} file(s) resolve")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
