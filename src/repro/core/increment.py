@@ -80,6 +80,7 @@ class GeStore:
         self.cache = VersionCache(os.path.join(root, "cache"), self.tables)
         self.registry = registry
         self.stores: dict[str, VersionedStore] = {}
+        self.load_errors: dict[str, Exception] = {}
         self.stores_root = os.path.join(root, "stores")
         os.makedirs(self.stores_root, exist_ok=True)
         if autoload:
@@ -87,6 +88,12 @@ class GeStore:
 
     # -- persistence (segmented store layout) --------------------------------
     def _open_persisted(self) -> None:
+        """Autoload every persisted store. A store that fails to load
+        (corrupt segments, unsupported schema, ...) is skipped and its
+        error recorded in ``load_errors`` (keyed by directory name) — one
+        bad directory must not brick access to every other store under the
+        root. ``open_store`` retries the load on direct access, surfacing
+        the store's actual error."""
         from .segments import MANIFEST_NAME
         for d in sorted(os.listdir(self.stores_root)):
             p = os.path.join(self.stores_root, d)
@@ -94,7 +101,11 @@ class GeStore:
                 continue
             if (os.path.exists(os.path.join(p, MANIFEST_NAME))
                     or os.path.exists(os.path.join(p, "meta.json"))):
-                st = VersionedStore.load(p, lazy=True)
+                try:
+                    st = VersionedStore.load(p, lazy=True)
+                except Exception as e:  # noqa: BLE001 — recorded, re-raised
+                    self.load_errors[d] = e
+                    continue
                 self.stores[st.name] = st
 
     def store_path(self, name: str) -> str:
@@ -125,7 +136,10 @@ class GeStore:
         segments newer than each manifest's watermark are written).
 
         Args:
-          store_name: one store, or None for all.
+          store_name: one store (reopened from disk if a tiered-memory
+            spill removed it from ``stores``), or None for every in-memory
+            store (spilled stores were saved by the spill itself, so there
+            is nothing of theirs left to flush).
 
         Returns:
           {store name: save stats} (see ``VersionedStore.save``).
@@ -137,12 +151,13 @@ class GeStore:
         out: dict[str, dict] = {}
         for name in names:
             path = self.store_path(name)
-            stats = self.stores[name].save(path)
+            stats = self.open_store(name).save(path)
             out[name] = stats
             # index the manifest in the `files` table: segment bytes are
             # visible to ops/eviction accounting but never cache-evictable
+            from .segments import MANIFEST_NAME
             self.tables.record_file(f"store-segments|{name}",
-                                    os.path.join(path, "MANIFEST.json"),
+                                    os.path.join(path, MANIFEST_NAME),
                                     "store-segment", True,
                                     nbytes=stats["disk_bytes"])
         return out

@@ -33,8 +33,13 @@ store metadata (name, schema, keys, versions):
     "index_gen":        index generation (bumped by full rewrite/compact)
     "segment_count":    committed line count of the index
     "segments_bytes":   committed byte length of the index
+    "segments_nbytes":  running total of committed segment file bytes
+                        (keeps incremental-save stats O(new segments))
 
-Durability protocol: segment files are written to ``.tmp`` then renamed;
+Durability protocol: segment files are written to ``.tmp``, fsynced, then
+renamed (the manifest and index generations likewise, with a directory
+fsync after the rename, so the commit survives power loss, not just
+process crashes);
 incremental saves append index lines (after truncating any uncommitted
 tail to ``segments_bytes``); full rewrites and compactions write a NEW
 index generation instead of touching the committed one; the manifest is
@@ -66,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import io
 import json
 import os
 from typing import TYPE_CHECKING, Sequence
@@ -125,12 +131,20 @@ def store_dir_name(name: str) -> str:
     return f"{safe}-{hashlib.sha256(name.encode()).hexdigest()[:8]}"
 
 
-def _sha256_file(path: str) -> str:
-    h = hashlib.sha256()
-    with open(path, "rb") as f:
-        for chunk in iter(lambda: f.read(1 << 20), b""):
-            h.update(chunk)
-    return h.hexdigest()
+def _fsync_dir(path: str) -> None:
+    """Best-effort fsync of a directory entry after rename/create. Unlike
+    data files, some filesystems reject opening or fsyncing directories,
+    so failures here are swallowed rather than aborting the save."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 # -- segment file I/O ---------------------------------------------------------
@@ -148,21 +162,40 @@ def write_segment(root: str, field: str, rows: np.ndarray, tss: np.ndarray,
     generation (which must stay intact until the manifest commit).
     """
     assert len(tss) > 0, "empty segments are never written"
-    seg_dir = os.path.join(root, SEGMENT_DIR, fs_name(field))
+    # store_dir_name, not fs_name: field names that sanitize identically
+    # ('a/b' vs 'a_b') must not write into each other's directory
+    field_dir = store_dir_name(field)
+    seg_dir = os.path.join(root, SEGMENT_DIR, field_dir)
     os.makedirs(seg_dir, exist_ok=True)
     ts0, ts1 = int(tss.min()), int(tss.max())
     packed, pack_meta = chain_pack(np.ascontiguousarray(vals),
                                    np.asarray(rows))
-    rel = os.path.join(SEGMENT_DIR, fs_name(field), f"{ts0}-{ts1}{tag}.npz")
+    rel = os.path.join(SEGMENT_DIR, field_dir, f"{ts0}-{ts1}{tag}.npz")
     path = os.path.join(root, rel)
-    tmp = path + ".tmp.npz"  # np.savez appends .npz to unsuffixed names
-    np.savez_compressed(tmp, rows=rows.astype(np.int32),
+    # serialize in memory so size + sha come from the buffer we wrote —
+    # no read-back pass over the file we just created
+    bio = io.BytesIO()
+    np.savez_compressed(bio, rows=rows.astype(np.int32),
                         ts=tss.astype(np.int64), vals=packed)
+    blob = bio.getvalue()
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        # tmp+rename alone only survives application crashes; a power
+        # failure can leave the renamed file empty unless its data was
+        # synced first. fsync errors (e.g. EIO) must abort the save.
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    # sync the whole new directory chain: seg_dir holds the file entry,
+    # segments/ holds the (possibly just-created) <field> entry; the root's
+    # segments/ entry is made durable by the manifest commit's root fsync
+    _fsync_dir(seg_dir)
+    _fsync_dir(os.path.join(root, SEGMENT_DIR))
     seg = SegmentMeta(field=field, path=rel, ts0=ts0, ts1=ts1,
                       n_cells=len(tss), kind=kind, pack=pack_meta,
-                      nbytes=os.path.getsize(path),
-                      sha256=_sha256_file(path))
+                      nbytes=len(blob),
+                      sha256=hashlib.sha256(blob).hexdigest())
     return seg, packed.nbytes
 
 
@@ -176,9 +209,12 @@ def read_segment(root: str, seg: SegmentMeta, dtype: np.dtype,
     """
     path = os.path.join(root, seg.path)
     check_segment_stat(root, seg)
-    if _sha256_file(path) != seg.sha256:
+    # one disk read: hash the buffer, then decode it from memory
+    with open(path, "rb") as f:
+        blob = f.read()
+    if hashlib.sha256(blob).hexdigest() != seg.sha256:
         raise CorruptSegmentError(f"segment {seg.path}: sha256 mismatch")
-    with np.load(path) as z:
+    with np.load(io.BytesIO(blob)) as z:
         rows, tss, packed = z["rows"], z["ts"], z["vals"]
     if len(rows) != seg.n_cells or len(tss) != seg.n_cells:
         raise CorruptSegmentError(
@@ -249,7 +285,10 @@ def write_manifest(root: str, man: dict) -> int:
     tmp = p + ".tmp"
     with open(tmp, "w") as f:
         json.dump(man, f)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, p)
+    _fsync_dir(root)
     return os.path.getsize(p)
 
 
@@ -320,13 +359,17 @@ def _write_new_index_generation(root: str, gen: int,
     data = "".join(json.dumps(s.to_json()) + "\n" for s in segs)
     with open(tmp, "w") as f:
         f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, p)
+    _fsync_dir(root)
     return name, len(data.encode())
 
 
 def _manifest_payload(store: "VersionedStore", saved_through: int, *,
                       segment_count: int, segments_bytes: int,
-                      segment_index: str, index_gen: int) -> dict:
+                      segment_index: str, index_gen: int,
+                      segments_nbytes: int) -> dict:
     return {
         "format": FORMAT,
         "name": store.name,
@@ -339,6 +382,10 @@ def _manifest_payload(store: "VersionedStore", saved_through: int, *,
         "index_gen": index_gen,
         "segment_count": segment_count,
         "segments_bytes": segments_bytes,
+        # running total of committed segment FILE bytes: keeps the
+        # incremental-save stats O(new segments) instead of re-reading and
+        # re-parsing the whole index just to sum nbytes
+        "segments_nbytes": int(segments_nbytes),
         "history_digests": list(store._version_digests),
     }
 
@@ -370,6 +417,17 @@ def _compatible(man: dict, store: "VersionedStore", *,
     return True
 
 
+def _digest_prefix(man: dict, prior_digests: Sequence[str] | None) -> bool:
+    """True when the manifest's content-digest chain is a prefix of
+    ``prior_digests`` — i.e. the directory's history is an ancestor of the
+    given chain, not a same-shaped divergent store's."""
+    if prior_digests is None:
+        return False
+    theirs = man.get("history_digests", [])
+    return (len(theirs) <= len(prior_digests)
+            and list(prior_digests)[: len(theirs)] == list(theirs))
+
+
 def _iter_logs(store: "VersionedStore"):
     """(field name, _CellLog, dtype, width) for every log incl. EXISTS."""
     for name, col in store.fields.items():
@@ -384,14 +442,14 @@ def save_store(store: "VersionedStore", path: str, *,
     """Segmented save: incremental when the manifest at ``path`` is a prefix
     of this store, full rewrite otherwise. See ``VersionedStore.save``."""
     os.makedirs(path, exist_ok=True)
-    man = None if force_full else read_manifest(path)
-    if man is not None and _compatible(man, store):
+    man = read_manifest(path)
+    if not force_full and man is not None and _compatible(man, store):
         return _save_incremental(store, path, man)
-    return _save_full(store, path, old_man=read_manifest(path))
+    return _save_full(store, path, old_man=man)
 
 
 def _seg_stats(segs: Sequence[SegmentMeta], raw: int, packed: int,
-               mode: str, manifest_bytes: int, all_segs,
+               mode: str, manifest_bytes: int, total_seg_bytes: int,
                index_bytes: int, index_written: int) -> dict:
     return {
         "mode": mode,
@@ -401,14 +459,12 @@ def _seg_stats(segs: Sequence[SegmentMeta], raw: int, packed: int,
         "raw_bytes": raw,
         "packed_bytes": packed,
         "manifest_bytes": manifest_bytes,
-        "disk_bytes": (sum(s.nbytes for s in all_segs) + manifest_bytes
-                       + index_bytes),
+        "disk_bytes": total_seg_bytes + manifest_bytes + index_bytes,
     }
 
 
 def _save_incremental(store: "VersionedStore", path: str, man: dict) -> dict:
     cutoff = int(man["saved_through_ts"])
-    old_segs = read_segment_index(path, man)
     new_segs: list[SegmentMeta] = []
     raw = packed = 0
     for name, log, dtype, width in _iter_logs(store):
@@ -420,13 +476,17 @@ def _save_incremental(store: "VersionedStore", path: str, man: dict) -> dict:
         raw += vals.nbytes
         packed += pbytes
     idx_bytes = _append_segment_index(path, man, new_segs)
+    prior_bytes = man.get("segments_nbytes")
+    if prior_bytes is None:  # manifest predates the running total
+        prior_bytes = sum(s.nbytes for s in read_segment_index(path, man))
+    total_seg_bytes = prior_bytes + sum(s.nbytes for s in new_segs)
     mb = write_manifest(path, _manifest_payload(
         store, max(cutoff, store.last_ts),
         segment_count=man["segment_count"] + len(new_segs),
         segments_bytes=idx_bytes, segment_index=_index_name(man),
-        index_gen=man.get("index_gen", 0)))
+        index_gen=man.get("index_gen", 0), segments_nbytes=total_seg_bytes))
     return _seg_stats(new_segs, raw, packed, "incremental", mb,
-                      old_segs + new_segs, idx_bytes,
+                      total_seg_bytes, idx_bytes,
                       idx_bytes - man["segments_bytes"])
 
 
@@ -456,9 +516,11 @@ def _save_full(store: "VersionedStore", path: str, *,
         raw += vals.nbytes
         packed += pbytes
     idx_name, idx_bytes = _write_new_index_generation(path, gen, segs)
+    total_seg_bytes = sum(s.nbytes for s in segs)
     mb = write_manifest(path, _manifest_payload(
         store, store.last_ts, segment_count=len(segs),
-        segments_bytes=idx_bytes, segment_index=idx_name, index_gen=gen))
+        segments_bytes=idx_bytes, segment_index=idx_name, index_gen=gen,
+        segments_nbytes=total_seg_bytes))
     # only after the new layout is committed: drop files it doesn't own —
     # legacy monolithic snapshots, the superseded index generation, and
     # segments of the divergent old manifest
@@ -472,8 +534,8 @@ def _save_full(store: "VersionedStore", path: str, *,
     for s in old_segs:
         if s.path not in keep:
             _remove_quiet(os.path.join(path, s.path))
-    return _seg_stats(segs, raw, packed, "full", mb, segs, idx_bytes,
-                      idx_bytes)
+    return _seg_stats(segs, raw, packed, "full", mb, total_seg_bytes,
+                      idx_bytes, idx_bytes)
 
 
 def _remove_quiet(path: str) -> None:
@@ -485,6 +547,17 @@ def _remove_quiet(path: str) -> None:
 
 # -- load ---------------------------------------------------------------------
 
+def _engine_schema(fields: list[dict]) -> list[dict]:
+    """Narrow float64 schema entries to float32 on load: the 32-bit query
+    engine always materialized float64 fields at float32 precision, so
+    this preserves observable behavior while letting stores persisted
+    before the wide-dtype rejection reopen (the next save migrates them to
+    float32 on disk via the schema-mismatch full rewrite). int64 has no
+    such lossless-in-practice narrowing and stays loudly rejected."""
+    return [{**f, "dtype": "float32"} if f.get("dtype") == "float64" else f
+            for f in fields]
+
+
 def load_store(cls, path: str, *, lazy: bool = True) -> "VersionedStore":
     """Open a store directory; see ``VersionedStore.load``."""
     from .store import FieldSchema, VersionInfo  # runtime import (cycle)
@@ -494,7 +567,8 @@ def load_store(cls, path: str, *, lazy: bool = True) -> "VersionedStore":
             return _load_legacy(cls, path)
         raise FileNotFoundError(f"no {MANIFEST_NAME} or legacy meta.json "
                                 f"under {path}")
-    st = cls(man["name"], [FieldSchema(**f) for f in man["schema"]],
+    st = cls(man["name"],
+             [FieldSchema(**f) for f in _engine_schema(man["schema"])],
              capacity=max(16, man["n_rows"]))
     st.n_rows = man["n_rows"]
     st.row_keys = [k.encode("latin1") for k in man["keys"]]
@@ -523,8 +597,8 @@ def load_store(cls, path: str, *, lazy: bool = True) -> "VersionedStore":
 
 # -- on-disk compaction -------------------------------------------------------
 
-def compact_on_disk(store: "VersionedStore", path: str,
-                    before_ts: int) -> dict:
+def compact_on_disk(store: "VersionedStore", path: str, before_ts: int, *,
+                    prior_digests: Sequence[str] | None = None) -> dict:
     """Rewrite the store directory to mirror an in-memory ``compact``:
     per field one "base" segment (collapsed history at ``before_ts``), one
     optional "delta" gap segment (tail cells whose original segments
@@ -534,9 +608,19 @@ def compact_on_disk(store: "VersionedStore", path: str,
     Must run AFTER the in-memory compaction (``VersionedStore.compact``
     calls it in that order). Falls back to a full rewrite when the on-disk
     manifest does not belong to this store.
+
+    Args:
+      prior_digests: the store's PRE-compaction content-digest chain
+        (in-memory compaction rechains the digests, so the post-compact
+        store can no longer be compared against the manifest directly).
+        The manifest's chain must be a prefix of it — otherwise the
+        directory holds a divergent store's data and retaining its tail
+        segments would silently splice foreign content; we full-rewrite
+        instead. ``None`` (no provenance known) also forces a full rewrite.
     """
     man = read_manifest(path)
-    if man is None or not _compatible(man, store, check_versions=False):
+    if man is None or not _compatible(man, store, check_versions=False) \
+            or not _digest_prefix(man, prior_digests):
         return save_store(store, path, force_full=True)
     retained: dict[str, list[SegmentMeta]] = {}
     covered: list[SegmentMeta] = []
@@ -570,16 +654,18 @@ def compact_on_disk(store: "VersionedStore", path: str,
     # commit order mirrors _save_full: new index generation, then the
     # manifest swap, then deletion of superseded files
     idx_name, idx_bytes = _write_new_index_generation(path, gen, all_segs)
+    total_seg_bytes = sum(s.nbytes for s in all_segs)
     mb = write_manifest(path, _manifest_payload(
         store, store.last_ts, segment_count=len(all_segs),
-        segments_bytes=idx_bytes, segment_index=idx_name, index_gen=gen))
+        segments_bytes=idx_bytes, segment_index=idx_name, index_gen=gen,
+        segments_nbytes=total_seg_bytes))
     if _index_name(man) != idx_name:
         _remove_quiet(os.path.join(path, _index_name(man)))
     keep = {s.path for s in all_segs}
     for seg in covered:
         if seg.path not in keep:
             _remove_quiet(os.path.join(path, seg.path))
-    stats = _seg_stats(new_segs, raw, packed, "compact", mb, all_segs,
+    stats = _seg_stats(new_segs, raw, packed, "compact", mb, total_seg_bytes,
                        idx_bytes, idx_bytes)
     stats["segments_retained"] = len(all_segs) - len(new_segs)
     stats["segments_dropped"] = len(covered)
@@ -634,7 +720,8 @@ def _load_legacy(cls, path: str) -> "VersionedStore":
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     data = np.load(os.path.join(path, "cells.npz"))
-    st = cls(meta["name"], [FieldSchema(**f) for f in meta["schema"]],
+    st = cls(meta["name"],
+             [FieldSchema(**f) for f in _engine_schema(meta["schema"])],
              capacity=max(16, meta["n_rows"]))
     st.n_rows = meta["n_rows"]
     st.row_keys = [k.encode("latin1") for k in meta["keys"]]

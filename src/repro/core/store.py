@@ -55,6 +55,30 @@ Timestamp = int
 TS_MAX = 2**31 - 2
 
 
+def _checked_cast(name: str, vals, dtype: np.dtype) -> np.ndarray:
+    """Cast a table value block to its field dtype, refusing same-kind
+    narrowing that would silently corrupt: out-of-range ints and float
+    magnitudes that overflow to inf / underflow to zero raise ValueError
+    (float mantissa rounding is accepted — the engine is 32-bit)."""
+    arr = np.asarray(vals)
+    with np.errstate(over="ignore"):  # overflow is checked by value below
+        out = np.ascontiguousarray(arr, dtype=dtype)
+    if arr.dtype == out.dtype:
+        return out
+    if np.issubdtype(arr.dtype, np.integer) and np.issubdtype(dtype, np.integer):
+        if not np.array_equal(out.astype(arr.dtype), arr):
+            raise ValueError(
+                f"field {name}: values exceed the {dtype} range")
+    elif np.issubdtype(arr.dtype, np.floating) and \
+            np.issubdtype(dtype, np.floating):
+        bad = ((np.isfinite(arr) & ~np.isfinite(out))
+               | ((arr != 0) & (out == 0)))
+        if bad.any():
+            raise ValueError(
+                f"field {name}: magnitudes exceed the {dtype} range")
+    return out
+
+
 def _clamp_ts(t: Timestamp) -> int:
     return int(min(max(int(t), -(2**31) + 1), TS_MAX))
 
@@ -561,6 +585,18 @@ class VersionedStore:
         field already exists."""
         if fs.name in self.fields:
             raise ValueError(f"field {fs.name} exists")
+        if fs.name == "__exists__":
+            # reserved: segments.EXISTS_FIELD stores the tombstone log
+            # under this sentinel; a user field with the same name would
+            # collide with it on disk and misattribute segments at load
+            raise ValueError("field name __exists__ is reserved")
+        if fs.np_dtype.itemsize > 4:
+            # the jax query kernels run 32-bit (x64 disabled): int64/float64
+            # cells would be silently downcast during materialization.
+            # Refuse loudly; wide values belong in multiple 32-bit lanes.
+            raise ValueError(
+                f"field {fs.name}: dtype {fs.dtype} is wider than 32 bits, "
+                "which the query engine cannot materialize losslessly")
         self.schema[fs.name] = fs
         self.fields[fs.name] = _FieldColumn(fs, self.capacity)
         self._invalidate_log()
@@ -625,8 +661,26 @@ class VersionedStore:
         self._ensure_exists_head()
         for name in table:
             if name not in self.fields:
-                # schema evolution on the fly: infer width/dtype
+                # schema evolution on the fly: infer width/dtype. np.asarray
+                # of plain Python numbers defaults to int64/float64 on
+                # 64-bit platforms; narrow to the engine's 32-bit lanes
+                # when lossless rather than tripping add_field's rejection
                 arr = np.asarray(table[name])
+                if arr.dtype == np.int64:
+                    # bounds check, not abs (abs wraps for int64-min)
+                    if (arr.size == 0 or (arr.min() >= -(2**31)
+                                          and arr.max() <= 2**31 - 1)):
+                        arr = arr.astype(np.int32)
+                elif arr.dtype == np.float64:
+                    with np.errstate(over="ignore"):  # overflow checked below
+                        a32 = arr.astype(np.float32)
+                    # mantissa rounding is accepted (the engine is 32-bit);
+                    # magnitude overflow to inf / underflow to zero is not —
+                    # those fall through to add_field's loud rejection
+                    bad = ((np.isfinite(arr) & ~np.isfinite(a32))
+                           | ((arr != 0) & (a32 == 0)))
+                    if not bad.any():
+                        arr = a32
                 self.add_field(FieldSchema(name, arr.shape[1], arr.dtype.name))
         keys = [k.encode() if isinstance(k, str) else bytes(k) for k in keys]
         was_known = np.fromiter((k in self.key_to_row for k in keys), bool,
@@ -641,7 +695,7 @@ class VersionedStore:
         for name, vals in table.items():
             col = self.fields[name]
             self._ensure_head(name)
-            vals = np.ascontiguousarray(vals, dtype=col.schema.np_dtype)
+            vals = _checked_cast(name, vals, col.schema.np_dtype)
             if vals.ndim == 1:
                 vals = vals[:, None]
             assert vals.shape == (len(keys), col.schema.width), (
@@ -953,6 +1007,10 @@ class VersionedStore:
           is given, the on-disk rewrite stats (``segments_written``,
           ``segments_retained``, ``bytes_written``, ...).
         """
+        # captured before rechaining: compact_on_disk proves the on-disk
+        # manifest is an ancestor of THIS history (not a same-shaped
+        # divergent store's) against the pre-compaction chain
+        pre_digests = list(self._version_digests)
         dropped = 0
         for col in list(self.fields.values()) + [self.exists_log]:
             vals, tss, ptr = col.csr(self.n_rows) if isinstance(col, _CellLog) \
@@ -993,7 +1051,8 @@ class VersionedStore:
         stats = {"cells_dropped": dropped, "versions_kept": len(kept) + 1}
         if path is not None:
             from . import segments
-            stats.update(segments.compact_on_disk(self, path, before_ts))
+            stats.update(segments.compact_on_disk(
+                self, path, before_ts, prior_digests=pre_digests))
         return stats
 
     # -- persistence: segmented, append-only layout (core/segments.py) -------

@@ -136,6 +136,8 @@ def narrow_dtype(maxabs: int, base=jnp.int32):
         return jnp.int8
     if maxabs < 32768:
         return jnp.int16
+    if maxabs < 2**31:
+        return jnp.int32
     return base
 
 
@@ -163,24 +165,42 @@ def chain_pack(vals: np.ndarray, rows: np.ndarray) -> tuple[np.ndarray, dict]:
     first[1:] = rows[1:] != rows[:-1]
     prev = np.roll(vals, 1, axis=0)
     prev[first] = 0  # chain heads pack against zero (stored raw)
-    # pad the cell count to a power-of-two bucket: every incremental save
-    # has a unique cell count, and an unbucketed call would re-trace the
-    # jitted kernel per save (zero rows delta to zero, so results and the
-    # narrowing stat are unaffected)
-    n = len(vals)
-    n_pad = max(512, 1 << (n - 1).bit_length())
-    if n_pad != n:
-        pad = ((0, n_pad - n), (0, 0))
-        vals_in = np.pad(vals, pad)
-        prev_in = np.pad(prev, pad)
+    if vals.dtype.itemsize == 8:
+        # 8-byte dtypes cannot pass through the jax kernels: with x64
+        # disabled jnp.asarray silently downcasts int64/float64 to 32 bits,
+        # corrupting any value outside the 32-bit range. Delta on host.
+        if np.issubdtype(vals.dtype, np.floating):
+            delta = (vals.view(np.int64) ^ prev.view(np.int64)).view(vals.dtype)
+        else:
+            # two's-complement wraparound; chain_unpack's add inverts it
+            # exactly, so overflowing deltas still round-trip
+            with np.errstate(over="ignore"):
+                delta = vals - prev
     else:
-        vals_in, prev_in = vals, prev
-    delta, _stat = delta_pack(jnp.asarray(vals_in), jnp.asarray(prev_in))
-    delta = np.asarray(delta)[:n]
+        # pad the cell count to a power-of-two bucket: every incremental
+        # save has a unique cell count, and an unbucketed call would
+        # re-trace the jitted kernel per save (zero rows delta to zero, so
+        # results and the narrowing stat are unaffected)
+        n = len(vals)
+        n_pad = max(512, 1 << (n - 1).bit_length())
+        if n_pad != n:
+            pad = ((0, n_pad - n), (0, 0))
+            vals_in = np.pad(vals, pad)
+            prev_in = np.pad(prev, pad)
+        else:
+            vals_in, prev_in = vals, prev
+        delta, _stat = delta_pack(jnp.asarray(vals_in), jnp.asarray(prev_in))
+        delta = np.asarray(delta)[:n]
     meta = {"mode": "delta", "dtype": vals.dtype.name}
     if np.issubdtype(vals.dtype, np.integer) and vals.dtype.itemsize >= 4:
-        maxabs = int(np.abs(delta.astype(np.int64)).max()) if delta.size else 0
-        narrow = narrow_dtype(maxabs)
+        # bound via min/max lifted to Python ints — exact even for
+        # int64-min, where np.abs silently wraps negative
+        if delta.size:
+            maxabs = max(-int(delta.min()), int(delta.max()))
+        else:
+            maxabs = 0
+        narrow = narrow_dtype(
+            maxabs, base=jnp.int64 if vals.dtype.itemsize == 8 else jnp.int32)
         if np.dtype(narrow) != vals.dtype:
             delta = delta.astype(narrow)
             meta["narrow"] = np.dtype(narrow).name
@@ -208,7 +228,7 @@ def chain_unpack(packed: np.ndarray, rows: np.ndarray, meta: dict,
     starts = np.nonzero(first)[0]
     lens = np.diff(np.append(starts, len(rows)))
     is_float = np.issubdtype(stored, np.floating)
-    ib = {4: np.int32, 2: np.int16}.get(stored.itemsize, np.int32)
+    ib = {8: np.int64, 4: np.int32, 2: np.int16}.get(stored.itemsize, np.int32)
     for depth in range(1, int(lens.max()) if len(lens) else 0):
         idx = starts[lens > depth] + depth
         if is_float:

@@ -108,7 +108,9 @@ class TieredStorePool:
         if self._facade is not None:
             return self._facade.store_path(name)
         if self.spill_root is not None:
-            return os.path.join(self.spill_root, _fs_name(name))
+            # store_dir_name, not fs_name: names that sanitize identically
+            # ('a/b' vs 'a_b') must not spill over each other's directory
+            return os.path.join(self.spill_root, _store_dir_name(name))
         return None
 
     def _apply_floor(self, name: str, st: VersionedStore) -> VersionedStore:
@@ -121,10 +123,14 @@ class TieredStorePool:
     def __getitem__(self, name: str) -> VersionedStore:
         st = self._stores.get(name)
         if st is None:
-            path = self._spilled.pop(name, None)
+            path = self._spilled.get(name)
             if path is None:
                 raise KeyError(name)
+            # load first, forget the spill record only on success: a failed
+            # reload (e.g. CorruptSegmentError) must keep surfacing instead
+            # of decaying into a KeyError on the next access
             st = self._apply_floor(name, VersionedStore.load(path, lazy=True))
+            del self._spilled[name]
             self._stores[name] = st
             self.stats["reloads"] += 1
         elif name in self._spilled:
@@ -190,8 +196,9 @@ class TieredStorePool:
                 st.drop_superlog()
                 self.stats["demotions"] += 1
                 n += 1
-                per_store[name] = sum(st.nbytes().values())
-                total = sum(per_store.values())
+                now = sum(st.nbytes().values())
+                total -= per_store[name] - now
+                per_store[name] = now
                 if total <= self.budget_bytes:
                     break
             path = self._spill_path(name)
@@ -207,9 +214,9 @@ class TieredStorePool:
         return n
 
 
-def _fs_name(name: str) -> str:
-    from repro.core.segments import fs_name
-    return fs_name(name)
+def _store_dir_name(name: str) -> str:
+    from repro.core.segments import store_dir_name
+    return store_dir_name(name)
 
 
 class GeStoreService:
@@ -250,7 +257,10 @@ class GeStoreService:
                                         spill_root=spill_root)
         else:
             self.pool = None
-        self._stores: Mapping[str, VersionedStore] = self.pool or backing
+        # explicit None check: the pool defines __len__, so an empty pool is
+        # falsy and `self.pool or backing` would silently bypass it
+        self._stores: Mapping[str, VersionedStore] = (
+            backing if self.pool is None else self.pool)
         self.max_batch = max_batch
         self.plan_cache_size = plan_cache_size
         self.max_views_per_plan = max_views_per_plan

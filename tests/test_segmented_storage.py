@@ -363,3 +363,211 @@ def test_gestore_flush_and_reopen(rng, tmp_path):
     gs2.cache.evict(0)
     assert os.path.exists(os.path.join(gs2.store_path("up"),
                                        segments.MANIFEST_NAME))
+
+
+# -- wide dtypes and divergent-history compaction ----------------------------
+
+def test_chain_codec_8byte_dtypes_beyond_32bit(rng):
+    """The on-disk chain codec must round-trip 8-byte dtypes with values
+    outside the 32-bit range (the jax delta kernels run 32-bit with x64
+    disabled, so chain_pack deltas these on host)."""
+    from repro.kernels.delta_codec import chain_pack, chain_unpack
+
+    vals = np.array([[2**40], [2**40 + 5], [7], [-2**45]], np.int64)
+    rows = np.array([0, 0, 1, 2], np.int32)
+    packed, meta = chain_pack(vals, rows)
+    got = chain_unpack(packed, rows, meta, np.dtype(np.int64))
+    assert np.array_equal(got, vals)
+
+    fv = rng.normal(scale=1e300, size=(6, 3)).astype(np.float64)
+    frows = np.array([0, 0, 0, 1, 2, 2], np.int32)
+    packed, meta = chain_pack(fv, frows)
+    got = chain_unpack(packed, frows, meta, np.dtype(np.float64))
+    assert np.array_equal(got, fv)
+
+    # extreme deltas (wraparound territory) still round-trip unnarrowed
+    iv = np.array([[2**62], [-(2**62)], [0]], np.int64)
+    irows = np.array([0, 0, 0], np.int32)
+    packed, meta = chain_pack(iv, irows)
+    assert meta.get("narrow") is None
+    got = chain_unpack(packed, irows, meta, np.dtype(np.int64))
+    assert np.array_equal(got, iv)
+
+
+def test_store_rejects_8byte_field_dtypes():
+    """The 32-bit query engine cannot materialize int64/float64 cells
+    losslessly; schema registration must fail loudly, not corrupt later."""
+    for dt in ("int64", "float64"):
+        with pytest.raises(ValueError, match="wider than 32 bits"):
+            VersionedStore("wide", [FieldSchema("x", 2, dt)])
+
+
+def test_compact_refuses_divergent_directory(rng, tmp_path):
+    """compact(path=) against a directory written by a DIFFERENT store with
+    the same name/keys/timestamps must full-rewrite, never splice the
+    foreign store's retained tail segments into its own manifest."""
+    keys = [f"k{i}" for i in range(25)]
+
+    def mk(seed):
+        st = VersionedStore("t", SCHEMA)
+        r = np.random.default_rng(seed)
+        for v in range(1, 6):
+            st.update(v * 10, keys, mk_table(r, 25))
+        return st
+
+    a, b = mk(1), mk(2)
+    d = str(tmp_path / "s")
+    a.save(d)                          # directory belongs to store A
+    want = {t: b.get_version(t) for t in (30, 40, 50)}
+    stats = b.compact(30, path=d)      # divergent: must not retain A's tail
+    assert stats.get("segments_retained", 0) == 0
+    re = VersionedStore.load(d)
+    for t in (30, 40, 50):
+        got = re.get_version(t)
+        assert got.keys == want[t].keys, t
+        for f in got.values:
+            assert np.array_equal(got.values[f], want[t].values[f]), (t, f)
+
+
+def test_field_segment_dirs_never_collide(rng, tmp_path):
+    """Field names that sanitize identically ('a/b' vs 'a_b') must get
+    distinct segment directories, or the second field's segment file
+    overwrites the first's and the store becomes unloadable."""
+    schema = [FieldSchema("a/b", 2, "int32"), FieldSchema("a_b", 2, "int32")]
+    st = VersionedStore("t", schema)
+    keys = [f"k{i}" for i in range(8)]
+    tab = {"a/b": rng.integers(0, 99, (8, 2)).astype(np.int32),
+           "a_b": rng.integers(100, 199, (8, 2)).astype(np.int32)}
+    st.update(10, keys, tab)
+    d = str(tmp_path / "s")
+    st.save(d)
+    re = VersionedStore.load(d)
+    got = re.get_version(10)
+    for f in ("a/b", "a_b"):
+        assert np.array_equal(got.values[f], tab[f]), f
+
+
+def test_reserved_exists_field_name_rejected():
+    """'__exists__' is the on-disk sentinel for the tombstone log; a user
+    field under that name would collide with it in the segment layout."""
+    with pytest.raises(ValueError, match="reserved"):
+        VersionedStore("t", [FieldSchema("__exists__", 1, "int8")])
+
+
+def test_gestore_flush_spilled_store_by_name(rng, tmp_path):
+    """flush(name) must reopen a store the tiered pool spilled out of the
+    shared dict instead of raising KeyError."""
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+    from repro.serve import GeStoreService
+    from repro.serve.gestore_service import VersionRequest
+
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=16, desc_width=4))
+    gs = core.GeStore(str(tmp_path / "gs"), reg)
+    gs.add_release("up", 1, ">A x\nACDE\n", parser_name="fasta")
+    svc = GeStoreService(gs, memory_budget_bytes=1)
+    svc.materialize([VersionRequest("up", 1)])     # flush -> enforce -> spill
+    assert "up" not in gs.stores
+    stats = gs.flush("up")                         # was KeyError pre-fix
+    assert stats["up"]["mode"] in ("incremental", "full")
+
+
+def test_schema_inference_narrows_platform_default_dtypes():
+    """update() with plain Python lists (np.asarray infers int64/float64
+    on 64-bit platforms) must narrow to the engine's 32-bit lanes when
+    lossless instead of tripping the wide-dtype rejection."""
+    st = VersionedStore("t", [])
+    st.update(10, ["k0"], {"x": [[1, 2]], "y": [[1.5, 2.5]]})
+    assert st.schema["x"].dtype == "int32"
+    assert st.schema["y"].dtype == "float32"
+    got = st.get_version(10)
+    assert got.values["x"].tolist() == [[1, 2]]
+    # values that genuinely need 64 bits still fail loudly at ingestion
+    st2 = VersionedStore("t2", [])
+    with pytest.raises(ValueError, match="wider than 32 bits"):
+        st2.update(10, ["k0"], {"x": [[2**40]]})
+    # int64-min must not slip past the bounds check via abs() wraparound
+    with pytest.raises(ValueError, match="wider than 32 bits"):
+        VersionedStore("t3", []).update(10, ["k0"], {"x": [[-2**63, 5]]})
+    # -2**31 is representable in int32 and narrows
+    st4 = VersionedStore("t4", [])
+    st4.update(10, ["k0"], {"x": [[-2**31]]})
+    assert st4.schema["x"].dtype == "int32"
+    # float magnitudes outside float32 range fail loudly, not inf/0
+    for v in (1e300, 1e-300):
+        with pytest.raises(ValueError, match="wider than 32 bits"):
+            VersionedStore("t5", []).update(10, ["k0"], {"x": [[v]]})
+
+
+def test_gestore_autoload_skips_unloadable_store(rng, tmp_path):
+    """One corrupt store directory must not brick GeStore autoload for
+    every other store under the root."""
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=16, desc_width=4))
+    root = str(tmp_path / "gs")
+    gs = core.GeStore(root, reg)
+    gs.add_release("good", 1, ">A x\nACDE\n", parser_name="fasta")
+    gs.add_release("bad", 1, ">B y\nACDF\n", parser_name="fasta")
+    gs.flush()
+    seg = seg_index(gs.store_path("bad"))[0]
+    with open(os.path.join(gs.store_path("bad"), seg.path), "r+b") as f:
+        f.truncate(4)                                   # corrupt one store
+
+    gs2 = core.GeStore(root, reg)                       # must not raise
+    assert "good" in gs2.stores
+    assert "bad" not in gs2.stores
+    assert list(gs2.load_errors)                        # recorded, not lost
+    with pytest.raises(segments.CorruptSegmentError):
+        gs2.open_store("bad")                           # surfaces on access
+
+
+def test_chain_pack_int64_min_delta_among_small_deltas():
+    """A single int64-min delta must block narrowing even when every other
+    delta is tiny (np.abs wraps int64-min negative, hiding it from a
+    max-of-abs bound)."""
+    from repro.kernels.delta_codec import chain_pack, chain_unpack
+
+    vals = np.array([[5], [-2**63 + 5]], np.int64)   # chain delta = -2**63
+    rows = np.array([0, 0], np.int32)
+    packed, meta = chain_pack(vals, rows)
+    assert meta.get("narrow") is None, meta
+    got = chain_unpack(packed, rows, meta, np.dtype(np.int64))
+    assert np.array_equal(got, vals)
+
+
+def test_update_existing_field_rejects_out_of_range_values():
+    """Out-of-range values fail loudly on EVERY update, not only at schema
+    inference — a later int64 block must not wrap into an int32 field."""
+    st = VersionedStore("t", [])
+    st.update(10, ["k0"], {"x": [[1]], "y": [[1.5]]})
+    with pytest.raises(ValueError, match="exceed the int32 range"):
+        st.update(20, ["k0"], {"x": np.array([[2**40]], np.int64)})
+    with pytest.raises(ValueError, match="exceed the float32 range"):
+        st.update(20, ["k0"], {"y": np.array([[1e300]], np.float64)})
+    st.update(30, ["k0"], {"x": [[7]], "y": [[0.25]]})   # in-range still fine
+    assert st.get_version(30).values["x"].tolist() == [[7]]
+
+
+def test_load_narrows_legacy_float64_schema(rng, tmp_path):
+    """A manifest persisted with a float64 field (pre-rejection) must still
+    load — narrowed to float32, which is the precision the 32-bit engine
+    always materialized — and migrate on the next save."""
+    st = VersionedStore("t", [FieldSchema("f", 2, "float32")])
+    vals = rng.normal(size=(6, 2)).astype(np.float32)
+    st.update(10, [f"k{i}" for i in range(6)], {"f": vals})
+    d = str(tmp_path / "s")
+    st.save(d)
+    m = manifest(d)
+    assert m["schema"][0]["dtype"] == "float32"
+    m["schema"][0]["dtype"] = "float64"          # as an old store would say
+    with open(os.path.join(d, segments.MANIFEST_NAME), "w") as f:
+        json.dump(m, f)
+    re = VersionedStore.load(d)
+    assert re.schema["f"].dtype == "float32"
+    assert np.array_equal(re.get_version(10).values["f"], vals)
+    assert re.save(d)["mode"] == "full"          # schema mismatch -> migrate
+    assert manifest(d)["schema"][0]["dtype"] == "float32"

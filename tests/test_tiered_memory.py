@@ -107,6 +107,55 @@ def test_pool_add_replacing_name_advances_epoch_floor(rng):
     assert pool["H"].log_epoch > high                 # no (name, epoch) alias
 
 
+def test_service_over_initially_empty_mapping_still_uses_pool(rng, tmp_path):
+    """An empty pool is falsy (it defines __len__): the service must still
+    route requests through it, or a store spilled out of the shared dict
+    raises KeyError on the next request instead of lazily reloading."""
+    stores = {}
+    svc = GeStoreService(stores, memory_budget_bytes=1,
+                         spill_root=str(tmp_path))
+    assert svc._stores is svc.pool
+    svc.pool.add("Z", mk_store("Z", rng))
+    v1 = svc.materialize([VersionRequest("Z", 20, ("a",))])[0]
+    assert svc.pool.stats["spills"] >= 1   # flush() enforced the budget
+    v2 = svc.materialize([VersionRequest("Z", 20, ("a",))])[0]
+    assert v2.keys == v1.keys
+    assert np.array_equal(v2.values["a"], v1.values["a"])
+
+
+def test_spill_paths_never_collide_for_sanitized_names(rng, tmp_path):
+    """'a/b' and 'a_b' sanitize to the same filesystem name; their spill
+    directories must differ or the second spill destroys the first."""
+    stores = {"a/b": mk_store("a/b", rng), "a_b": mk_store("a_b", rng)}
+    wants = {n: st.get_version(20, fields=["a"]) for n, st in stores.items()}
+    pool = TieredStorePool(stores, budget_bytes=1, spill_root=str(tmp_path))
+    assert pool.enforce() >= 2             # both stores spill to disk
+    for name, want in wants.items():
+        got = pool[name].get_version(20, fields=["a"])
+        assert got.keys == want.keys       # keys embed the store name
+        assert np.array_equal(got.values["a"], want.values["a"])
+
+
+def test_failed_reload_keeps_spill_record(rng, tmp_path):
+    """A reload that raises (corrupt segments) must keep the spill record:
+    every access re-raises the corruption, never a masking KeyError."""
+    import glob
+    import pytest
+    from repro.core.segments import CorruptSegmentError
+
+    pool = TieredStorePool({"K": mk_store("K", rng)}, budget_bytes=1,
+                           spill_root=str(tmp_path))
+    assert pool.enforce() >= 1
+    seg = glob.glob(str(tmp_path / "**" / "segments" / "**" / "*.npz"),
+                    recursive=True)[0]
+    with open(seg, "r+b") as f:            # torn write: truncate a segment
+        f.truncate(8)
+    for _ in range(2):                     # second access must not KeyError
+        with pytest.raises(CorruptSegmentError):
+            pool["K"]
+    assert "K" in pool
+
+
 def test_store_nbytes_tracks_superlog(rng):
     st = mk_store("G", rng)
     host_only = st.nbytes()
