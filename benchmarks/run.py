@@ -1,10 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV and writes the same rows to
-``BENCH_results.json`` (the CI artifact). Set BENCH_N / BENCH_APP_N /
-BENCH_BATCH_N to scale (defaults sized for a single CPU core; the
-operations are row-parallel, see DESIGN.md §8 for the pod-scale throughput
-argument).
+Prints ``name,us_per_call,derived`` CSV and merges the same rows into
+``BENCH_results.json`` (the CI artifact) *per table*: a run replaces only
+the tables it attempted, so a partial or BENCH_TABLES-filtered run no
+longer clobbers earlier results. Set BENCH_N / BENCH_APP_N / BENCH_BATCH_N
+/ BENCH_STORE_N / BENCH_SHARD_N / BENCH_SHARDS to scale (defaults sized
+for a single CPU core; the operations are row-parallel, see DESIGN.md §8
+for the pod-scale throughput argument), and BENCH_TABLES to a
+comma-separated list of table keys (e.g. ``table5,table7``) to run a
+subset.
 """
 from __future__ import annotations
 
@@ -14,6 +18,33 @@ import sys
 import traceback
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_RESULTS = os.path.join(_ROOT, "BENCH_results.json")
+
+
+def _table_key(mod) -> str:
+    """'benchmarks.table5_batched' -> 'table5' (matches its row prefixes)."""
+    return mod.__name__.split(".")[-1].split("_")[0]
+
+
+def _merge(path: str, attempted: set[str], results: list[dict],
+           failures: list[str]) -> dict:
+    """Per-table merge: rows and failures of tables NOT attempted by this
+    run survive; attempted tables are replaced wholesale."""
+    old_results: list[dict] = []
+    old_failures: list[str] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            old_results = old.get("results", [])
+            old_failures = old.get("failures", [])
+        except (json.JSONDecodeError, OSError):
+            pass  # unreadable history: start fresh
+    keep = [r for r in old_results
+            if r.get("name", "").split(".")[0] not in attempted]
+    keep_fail = [f for f in old_failures
+                 if f.split(".")[-1].split("_")[0] not in attempted]
+    return {"results": keep + results, "failures": keep_fail + failures}
 
 
 def main() -> None:
@@ -23,13 +54,23 @@ def main() -> None:
     from benchmarks import (fig1_growth, roofline_table, table1_lifecycle,
                             table2_incremental, table3_split,
                             table4_application, table5_batched,
-                            table6_storage)
+                            table6_storage, table7_sharding)
+    mods = [table1_lifecycle, table2_incremental, table3_split,
+            table4_application, table5_batched, table6_storage,
+            table7_sharding, fig1_growth, roofline_table]
+    only = {w.strip() for w in os.environ.get("BENCH_TABLES", "").split(",")
+            if w.strip()}
+    if only:
+        unknown = only - {_table_key(m) for m in mods}
+        if unknown:
+            print(f"BENCH_TABLES names unknown tables: {sorted(unknown)}",
+                  file=sys.stderr)
+            sys.exit(2)
+        mods = [m for m in mods if _table_key(m) in only]
     print("name,us_per_call,derived")
     results = []
     failures = []
-    for mod in (table1_lifecycle, table2_incremental, table3_split,
-                table4_application, table5_batched, table6_storage,
-                fig1_growth, roofline_table):
+    for mod in mods:
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.3f},{derived}")
@@ -39,8 +80,10 @@ def main() -> None:
             failures.append(mod.__name__)
             print(f"{mod.__name__},NaN,FAILED", file=sys.stderr)
             traceback.print_exc()
-    with open(os.path.join(_ROOT, "BENCH_results.json"), "w") as f:
-        json.dump({"results": results, "failures": failures}, f, indent=2)
+    merged = _merge(_RESULTS, {_table_key(m) for m in mods}, results,
+                    failures)
+    with open(_RESULTS, "w") as f:
+        json.dump(merged, f, indent=2)
     if failures:
         sys.exit(1)
 

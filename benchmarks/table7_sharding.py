@@ -1,0 +1,81 @@
+"""Table VII (new): sharded-store scatter-gather throughput vs shard count.
+
+The paper spreads meta-database rows across HBase region servers so version
+generation parallelizes with the data (§II.B/§V); core/shard.py is that
+scale-out axis here. This table ingests the same synthetic release history
+into a ShardedStore at several shard counts (1 = the unsharded baseline
+path wrapped in the facade) and measures update (scatter) throughput and
+batched get_versions (scatter-gather materialization) throughput.
+
+On one host the shards run sequentially, so this measures the facade's
+overhead floor and per-shard scaling shape, not multi-host speedup — the
+derived fields record per-shard work sizes so the N-host projection is just
+a division. BENCH_SHARDS picks the shard counts (comma-separated), e.g.
+the CI smoke sets ``BENCH_SHARDS=1,2`` to exercise the scatter-gather path
+cheaply.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.shard import ShardedStore
+from repro.core.store import FieldSchema
+
+from ._util import synth_release, timeit
+
+N = int(os.environ.get("BENCH_SHARD_N", 12_000))
+SHARDS = [int(s) for s in
+          os.environ.get("BENCH_SHARDS", "1,2,4").split(",") if s.strip()]
+Q = 32  # concurrent pinned versions per materialization wave
+FIELDS = ["sequence", "length"]
+
+
+def _schema() -> list[FieldSchema]:
+    return [FieldSchema("sequence", 64, "int32"),
+            FieldSchema("length", 1, "int32"),
+            FieldSchema("annotation", 8, "int32")]
+
+
+def _releases():
+    rels = [synth_release(N, seed=1)]
+    for v in range(1, 4):
+        rels.append(synth_release(0, base=rels[-1], frac_updated=0.03,
+                                  n_new=N // 100, seed=v + 1))
+    return rels
+
+
+def run() -> list[tuple[str, float, str]]:
+    rels = _releases()
+    rows = []
+    base_update = base_query = None
+    # the relative column is named for the shard count it is relative to:
+    # BENCH_SHARDS need not include 1
+    rel_label = f"rel_s{SHARDS[0]}"
+    for s in SHARDS:
+        st = ShardedStore("up", _schema(), n_shards=s, capacity=N + N // 8)
+        for v, rel in enumerate(rels[:-1]):
+            st.update((v + 1) * 10, *rel)
+        last_ts = len(rels) * 10
+
+        def ingest():
+            st.update(last_ts, *rels[-1])
+
+        # one timed ingest of the final release (reps=1: updates are
+        # monotonic, a release cannot be replayed into the same store)
+        t_upd, _ = timeit(ingest, reps=1, warmup=0)
+        ts_list = [((i % len(rels)) + 1) * 10 for i in range(Q)]
+
+        def wave():
+            return st.get_versions(ts_list, fields=FIELDS)
+
+        t_q, _ = timeit(wave, reps=2, warmup=1)
+        if base_update is None:
+            base_update, base_query = t_upd, t_q
+        rows.append((f"table7.update_s{s}", t_upd * 1e6 / len(rels[-1][0]),
+                     f"entries_per_s={len(rels[-1][0]) / t_upd:.0f};"
+                     f"{rel_label}={base_update / t_upd:.2f}x"))
+        rows.append((f"table7.get_versions_s{s}_q{Q}", t_q * 1e6 / Q,
+                     f"versions_per_s={Q / t_q:.1f};"
+                     f"{rel_label}={base_query / t_q:.2f}x;"
+                     f"rows_per_shard={st.n_rows // s}"))
+    return rows

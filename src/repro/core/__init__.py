@@ -6,6 +6,7 @@ increment engine (generate/merge around unmodified tools) -> plugins/parsers
 """
 from .store import (FieldSchema, Increment, VersionedStore, VersionInfo,
                     VersionView, KIND_DELETED, KIND_NEW, KIND_UPDATED, TS_MAX)
+from .shard import ShardedStore, open_any_store
 from .tables import SystemTables
 from .cache import VersionCache, descriptor
 from .plugins import (FileGenerator, FileParser, OutputMerger, PluginRegistry,
@@ -17,7 +18,8 @@ from .change import SignificanceProfile, classify
 
 __all__ = [
     "FieldSchema", "Increment", "VersionedStore", "VersionInfo", "VersionView",
-    "KIND_DELETED", "KIND_NEW", "KIND_UPDATED", "TS_MAX", "SystemTables",
+    "KIND_DELETED", "KIND_NEW", "KIND_UPDATED", "TS_MAX", "ShardedStore",
+    "open_any_store", "SystemTables",
     "VersionCache", "descriptor", "FileGenerator", "FileParser", "OutputMerger",
     "PluginRegistry", "REGISTRY", "ToolPlugin", "AppendMerger",
     "BlastEvalueMerger", "GeneratedInput", "GeStore", "EmbeddingSearchDB",

@@ -32,10 +32,23 @@ def descriptor(file_id: str, t0: int, t1: int, *, filter_expr: str = "",
 
 
 class VersionCache:
-    def __init__(self, root: str, tables: SystemTables | None = None):
+    def __init__(self, root: str, tables: SystemTables | None = None, *,
+                 max_bytes: int | None = None):
+        """Args:
+          root: cache directory.
+          tables: `files` system table (descriptor -> path index).
+          max_bytes: optional byte budget — every ``put`` runs the LRU
+            ``evict`` down to it, so serving hosts get a bounded cache
+            instead of the paper's unbounded-plus-cron-job model. None
+            (default) preserves the paper-faithful unbounded behavior.
+            A budget smaller than a single generated file still admits
+            the file being written (``put`` returns a live path); it is
+            evicted by the next put.
+        """
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.tables = tables or SystemTables()
+        self.max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
 
@@ -65,15 +78,18 @@ class VersionCache:
         os.replace(tmp, path)
         self.tables.record_file(desc, path, plugin, in_store,
                                 nbytes=os.path.getsize(path))
+        if self.max_bytes is not None:
+            self.evict(self.max_bytes, protect=desc)
         return path
 
-    def evict(self, max_bytes: int) -> int:
+    def evict(self, max_bytes: int, *, protect: str | None = None) -> int:
         """Drop least-recently-used generated files until total <= max_bytes.
 
         Store segment manifests (plugin ``store-segment``, recorded by
         ``GeStore.flush``) are never candidates: generated files are
         regenerable from the store, but the segments ARE the store —
-        evicting them would destroy data, not cache.
+        evicting them would destroy data, not cache. ``protect`` exempts
+        one descriptor (the file a ``put`` just returned a live path to).
         """
         rows = sorted((r for r in self.tables.files.values()
                        if r.path and r.plugin != "store-segment"),
@@ -83,6 +99,8 @@ class VersionCache:
         for r in rows:
             if total <= max_bytes:
                 break
+            if r.file_id == protect:
+                continue
             if os.path.exists(r.path):
                 os.remove(r.path)
             total -= r.bytes

@@ -24,7 +24,10 @@ import numpy as np
 
 from .cache import VersionCache, descriptor
 from .plugins import PluginRegistry, ToolPlugin
-from .store import Increment, VersionedStore, KIND_DELETED, KIND_NEW, KIND_UPDATED
+from .shard import (SHARD_MANIFEST_NAME, ShardedStore, is_sharded_dir,
+                    open_any_store)
+from .store import (FieldSchema, Increment, VersionedStore, KIND_DELETED,
+                    KIND_NEW, KIND_UPDATED)
 from .tables import SystemTables
 
 
@@ -67,19 +70,23 @@ class GeStore:
     """
 
     def __init__(self, root: str, registry: PluginRegistry, *,
-                 autoload: bool = True):
+                 autoload: bool = True, cache_max_bytes: int | None = None):
         """Args:
           root: GeStore home (system tables, cache, persisted stores).
           registry: parser/tool plugins.
           autoload: reopen stores previously persisted by ``flush()``
             (lazy — segment files are read only when queries need them).
+          cache_max_bytes: byte budget for the generated-file cache —
+            every ``cache.put`` LRU-evicts down to it (None = unbounded,
+            the paper's cron-job retention model).
         """
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.tables = SystemTables(os.path.join(root, "sys"))
-        self.cache = VersionCache(os.path.join(root, "cache"), self.tables)
+        self.cache = VersionCache(os.path.join(root, "cache"), self.tables,
+                                  max_bytes=cache_max_bytes)
         self.registry = registry
-        self.stores: dict[str, VersionedStore] = {}
+        self.stores: dict[str, VersionedStore | ShardedStore] = {}
         self.load_errors: dict[str, Exception] = {}
         self.stores_root = os.path.join(root, "stores")
         os.makedirs(self.stores_root, exist_ok=True)
@@ -99,10 +106,11 @@ class GeStore:
             p = os.path.join(self.stores_root, d)
             if not os.path.isdir(p):
                 continue
-            if (os.path.exists(os.path.join(p, MANIFEST_NAME))
+            if (is_sharded_dir(p)
+                    or os.path.exists(os.path.join(p, MANIFEST_NAME))
                     or os.path.exists(os.path.join(p, "meta.json"))):
                 try:
-                    st = VersionedStore.load(p, lazy=True)
+                    st = open_any_store(p, lazy=True)
                 except Exception as e:  # noqa: BLE001 — recorded, re-raised
                     self.load_errors[d] = e
                     continue
@@ -112,23 +120,49 @@ class GeStore:
         from .segments import store_dir_name
         return os.path.join(self.stores_root, store_dir_name(name))
 
-    def open_store(self, name: str) -> VersionedStore:
-        """The named store, transparently reopening it (lazy) from
-        ``store_path(name)`` when it is not in memory — e.g. after a
-        tiered-memory spill removed it from ``stores``.
+    def _persisted(self, name: str) -> bool:
+        """Whether a store directory (either flavor) exists for ``name``."""
+        from .segments import MANIFEST_NAME
+        p = self.store_path(name)
+        return (is_sharded_dir(p)
+                or os.path.exists(os.path.join(p, MANIFEST_NAME))
+                or os.path.exists(os.path.join(p, "meta.json")))
+
+    def open_store(self, name: str) -> VersionedStore | ShardedStore:
+        """The named store (sharded or not), transparently reopening it
+        (lazy) from ``store_path(name)`` when it is not in memory — e.g.
+        after a tiered-memory spill removed it from ``stores``.
 
         Raises:
           KeyError: the store neither exists in memory nor on disk.
         """
         st = self.stores.get(name)
         if st is None:
-            from .segments import MANIFEST_NAME
-            p = self.store_path(name)
-            if not (os.path.exists(os.path.join(p, MANIFEST_NAME))
-                    or os.path.exists(os.path.join(p, "meta.json"))):
+            if not self._persisted(name):
                 raise KeyError(name)
-            st = VersionedStore.load(p, lazy=True)
+            st = open_any_store(self.store_path(name), lazy=True)
             self.stores[name] = st
+        return st
+
+    def create_store(self, name: str, schema: Sequence[FieldSchema], *,
+                     shards: int = 1,
+                     capacity: int = 1024) -> VersionedStore | ShardedStore:
+        """Create (and register) a new store; ``shards > 1`` makes it a
+        hash-partitioned ``ShardedStore`` — transparent to every query and
+        persistence path above.
+
+        Raises:
+          ValueError: a store with this name already exists (in memory or
+            persisted under the root).
+        """
+        if name in self.stores or self._persisted(name):
+            raise ValueError(f"store {name} already exists")
+        if shards > 1:
+            st = ShardedStore(name, schema, n_shards=shards,
+                              capacity=capacity)
+        else:
+            st = VersionedStore(name, schema, capacity=capacity)
+        self.stores[name] = st
         return st
 
     def flush(self, store_name: str | None = None) -> dict[str, dict]:
@@ -151,13 +185,16 @@ class GeStore:
         out: dict[str, dict] = {}
         for name in names:
             path = self.store_path(name)
-            stats = self.open_store(name).save(path)
+            store = self.open_store(name)
+            stats = store.save(path)
             out[name] = stats
             # index the manifest in the `files` table: segment bytes are
             # visible to ops/eviction accounting but never cache-evictable
             from .segments import MANIFEST_NAME
+            manifest = (SHARD_MANIFEST_NAME if isinstance(store, ShardedStore)
+                        else MANIFEST_NAME)
             self.tables.record_file(f"store-segments|{name}",
-                                    os.path.join(path, MANIFEST_NAME),
+                                    os.path.join(path, manifest),
                                     "store-segment", True,
                                     nbytes=stats["disk_bytes"])
         return out
@@ -165,17 +202,20 @@ class GeStore:
     # -- data-feeder interface (Fig. 3 left) --------------------------------
     def add_release(self, store_name: str, ts: int, text: str, *,
                     parser_name: str, label: str = "",
-                    full_release: bool = True):
+                    full_release: bool = True, shards: int = 1):
         """Parse and ingest one release into a store (created on first use).
 
         Args:
-          store_name: target store (a new VersionedStore is created with
-            the parser's schema when absent).
+          store_name: target store (a new store is created with the
+            parser's schema when absent).
           ts: release timestamp (strictly greater than the store's last).
           text: raw release file content for ``parser_name``.
           label: human-readable release label.
           full_release: paper semantics — keys absent from this release
             are tombstoned; False = patch semantics.
+          shards: partition count used ONLY when the store is created by
+            this call (>1 = hash-partitioned ShardedStore); an existing
+            store keeps its own layout.
 
         Returns:
           VersionInfo with new/updated/deleted counts.
@@ -188,9 +228,9 @@ class GeStore:
         try:
             store = self.open_store(store_name)  # in memory, or spilled
         except KeyError:
-            store = VersionedStore(store_name, parser.schema(),
-                                   capacity=max(16, len(keys)))
-            self.stores[store_name] = store
+            store = self.create_store(store_name, parser.schema(),
+                                      shards=shards,
+                                      capacity=max(16, len(keys)))
         info = store.update(ts, keys, table, label=label,
                             full_release=full_release)
         self.tables.record_update(store_name, info)

@@ -83,6 +83,37 @@ def _clamp_ts(t: Timestamp) -> int:
     return int(min(max(int(t), -(2**31) + 1), TS_MAX))
 
 
+def infer_field_schema(name: str, values) -> "FieldSchema":
+    """Schema for a field seen for the first time in an update table.
+
+    np.asarray of plain Python numbers defaults to int64/float64 on 64-bit
+    platforms; narrow to the engine's 32-bit lanes when lossless rather
+    than tripping add_field's wide-dtype rejection. The sharded facade
+    (core/shard.py) calls this on the FULL value block before scattering,
+    so every shard adopts the same schema the unsharded store would have —
+    per-shard slices must never make independent narrowing decisions.
+    """
+    arr = np.asarray(values)
+    if arr.ndim == 1:
+        arr = arr[:, None]
+    if arr.dtype == np.int64:
+        # bounds check, not abs (abs wraps for int64-min)
+        if (arr.size == 0 or (arr.min() >= -(2**31)
+                              and arr.max() <= 2**31 - 1)):
+            arr = arr.astype(np.int32)
+    elif arr.dtype == np.float64:
+        with np.errstate(over="ignore"):  # overflow checked below
+            a32 = arr.astype(np.float32)
+        # mantissa rounding is accepted (the engine is 32-bit); magnitude
+        # overflow to inf / underflow to zero is not — those fall through
+        # to add_field's loud rejection
+        bad = ((np.isfinite(arr) & ~np.isfinite(a32))
+               | ((arr != 0) & (a32 == 0)))
+        if not bad.any():
+            arr = a32
+    return FieldSchema(name, arr.shape[1], arr.dtype.name)
+
+
 @dataclasses.dataclass(frozen=True)
 class FieldSchema:
     name: str
@@ -513,6 +544,12 @@ class VersionedStore:
         unaffected: the next batched query rebuilds it from the host CSR."""
         self._superlog = None
 
+    def has_device_state(self) -> bool:
+        """Whether a fused superlog (the device tier) is currently held —
+        the tiered memory manager's device->host demotion predicate,
+        shared with ShardedStore."""
+        return self._superlog is not None
+
     def nbytes(self) -> dict:
         """Resident-memory accounting: ``{"host": int, "device": int}``.
 
@@ -579,10 +616,10 @@ class VersionedStore:
         self._exists_head_stale = False
 
     # -- schema evolution (HBase column flexibility, §III.B) ----------------
-    def add_field(self, fs: FieldSchema) -> None:
-        """Add a column (schema evolution). Existing rows read as zeros /
-        not-found until a release writes them. Raises ValueError when the
-        field already exists."""
+    def _validate_new_field(self, fs: FieldSchema) -> None:
+        """All add_field preconditions, with no mutation — callers that
+        register several fields (or validate a whole release up front)
+        check everything before changing anything."""
         if fs.name in self.fields:
             raise ValueError(f"field {fs.name} exists")
         if fs.name == "__exists__":
@@ -597,6 +634,12 @@ class VersionedStore:
             raise ValueError(
                 f"field {fs.name}: dtype {fs.dtype} is wider than 32 bits, "
                 "which the query engine cannot materialize losslessly")
+
+    def add_field(self, fs: FieldSchema) -> None:
+        """Add a column (schema evolution). Existing rows read as zeros /
+        not-found until a release writes them. Raises ValueError when the
+        field already exists."""
+        self._validate_new_field(fs)
         self.schema[fs.name] = fs
         self.fields[fs.name] = _FieldColumn(fs, self.capacity)
         self._invalidate_log()
@@ -659,30 +702,29 @@ class VersionedStore:
         if ts <= self.last_ts:
             raise ValueError(f"timestamps must be monotonic: {ts} <= {self.last_ts}")
         self._ensure_exists_head()
+        # validate EVERYTHING before any mutation — schema registration,
+        # row allocation, cell appends: a release rejected on its third
+        # field (or an unconvertible key) must leave no phantom columns,
+        # rows, or cells behind
+        keys = [k.encode() if isinstance(k, str) else bytes(k) for k in keys]
+        new_fields: dict[str, FieldSchema] = {}
         for name in table:
             if name not in self.fields:
-                # schema evolution on the fly: infer width/dtype. np.asarray
-                # of plain Python numbers defaults to int64/float64 on
-                # 64-bit platforms; narrow to the engine's 32-bit lanes
-                # when lossless rather than tripping add_field's rejection
-                arr = np.asarray(table[name])
-                if arr.dtype == np.int64:
-                    # bounds check, not abs (abs wraps for int64-min)
-                    if (arr.size == 0 or (arr.min() >= -(2**31)
-                                          and arr.max() <= 2**31 - 1)):
-                        arr = arr.astype(np.int32)
-                elif arr.dtype == np.float64:
-                    with np.errstate(over="ignore"):  # overflow checked below
-                        a32 = arr.astype(np.float32)
-                    # mantissa rounding is accepted (the engine is 32-bit);
-                    # magnitude overflow to inf / underflow to zero is not —
-                    # those fall through to add_field's loud rejection
-                    bad = ((np.isfinite(arr) & ~np.isfinite(a32))
-                           | ((arr != 0) & (a32 == 0)))
-                    if not bad.any():
-                        arr = a32
-                self.add_field(FieldSchema(name, arr.shape[1], arr.dtype.name))
-        keys = [k.encode() if isinstance(k, str) else bytes(k) for k in keys]
+                # schema evolution on the fly (see infer_field_schema)
+                fs = infer_field_schema(name, table[name])
+                self._validate_new_field(fs)
+                new_fields[name] = fs
+        casted: dict[str, np.ndarray] = {}
+        for name, vals in table.items():
+            fs = new_fields.get(name) or self.fields[name].schema
+            vals = _checked_cast(name, vals, fs.np_dtype)
+            if vals.ndim == 1:
+                vals = vals[:, None]
+            assert vals.shape == (len(keys), fs.width), (
+                f"{name}: {vals.shape} != {(len(keys), fs.width)}")
+            casted[name] = vals
+        for fs in new_fields.values():
+            self.add_field(fs)
         was_known = np.fromiter((k in self.key_to_row for k in keys), bool,
                                 count=len(keys))
         rows = self._rows_for_keys(keys, create=True)
@@ -692,14 +734,9 @@ class VersionedStore:
 
         n_updated_rows = np.zeros(self.n_rows, bool)
         hparts = [str(ts).encode(), str(len(keys)).encode()]
-        for name, vals in table.items():
+        for name, vals in casted.items():
             col = self.fields[name]
             self._ensure_head(name)
-            vals = _checked_cast(name, vals, col.schema.np_dtype)
-            if vals.ndim == 1:
-                vals = vals[:, None]
-            assert vals.shape == (len(keys), col.schema.width), (
-                f"{name}: {vals.shape} != {(len(keys), col.schema.width)}")
             fp = kops.fingerprint_rows(vals)
             same = (fp == col.head_fp[rows]).all(axis=1) & col.head_has[rows]
             changed = ~same

@@ -16,14 +16,15 @@ from .delta_codec import (chain_pack, chain_unpack, delta_pack, delta_unpack,
 from .fingerprint import fingerprint
 from .flash_attention import flash_attention
 from .masked_merge import masked_merge
+from .shard_route import merge_shard_rows, route_keys, shard_route
 from .version_select import masked_cumsum, version_select
 
 __all__ = [
     "fingerprint", "fingerprint_rows", "masked_cumsum", "version_select",
     "batched_masked_cumsum", "batched_version_select",
     "delta_pack", "delta_unpack", "chain_pack", "chain_unpack",
-    "narrow_dtype", "masked_merge",
-    "flash_attention", "to_int_lanes", "ref",
+    "narrow_dtype", "masked_merge", "shard_route", "route_keys",
+    "merge_shard_rows", "flash_attention", "to_int_lanes", "ref",
 ]
 
 

@@ -100,6 +100,47 @@ def ref_version_select(log_vals, log_ts, row_ptr, t_query):
 
 
 # ---------------------------------------------------------------------------
+# shard_route: stable key -> shard hashing for the sharded store facade.
+# ---------------------------------------------------------------------------
+
+# xxHash 32-bit primes, wrapped to int32 (int32 wraparound multiplies produce
+# the same bits as uint32 multiplies, and int32 is what the VPU natively runs)
+RT_MUL1 = np.int32(-1640531535)   # 0x9E3779B1
+RT_MUL2 = np.int32(-2048144777)   # 0x85EBCA77
+RT_MUL3 = np.int32(-1028477379)   # 0xC2B2AE3D
+RT_MUL4 = np.int32(668265263)     # 0x27D4EB2F
+
+
+def ref_shard_route(lanes: jax.Array, lengths: jax.Array,
+                    n_shards: int) -> jax.Array:
+    """lanes: (N, W) int32 little-endian-packed key bytes (zero-padded);
+    lengths: (N,) int32 true key byte lengths -> (N,) int32 shard ids in
+    [0, n_shards).
+
+    The hash is *width-stable by construction*: a zero lane contributes
+    nothing (0 * mul rotated is still 0), so the same key routes to the same
+    shard no matter how wide its batch happened to be padded — the property
+    that makes the routing usable as a persistent partitioning function.
+    Keys whose real bytes end in zeros are disambiguated by folding the byte
+    length into the final mix.
+    """
+    assert lanes.ndim == 2 and lanes.dtype == jnp.int32
+    n, w = lanes.shape
+    h = jnp.zeros((n,), jnp.int32)
+    for j in range(w):  # static unroll: key widths are small (a few lanes)
+        t = lanes[:, j] * RT_MUL1
+        t = t ^ jax.lax.shift_right_logical(t, 15)
+        t = t * RT_MUL2
+        r = (j % 31) + 1  # position-dependent rotate, never by 0 or 32
+        h = h ^ ((t << r) | jax.lax.shift_right_logical(t, 32 - r))
+    h = h ^ (lengths.astype(jnp.int32) * RT_MUL3)
+    h = h ^ jax.lax.shift_right_logical(h, 16)
+    h = h * RT_MUL4
+    h = h ^ jax.lax.shift_right_logical(h, 13)
+    return (h & jnp.int32(0x7FFFFFFF)) % jnp.int32(n_shards)
+
+
+# ---------------------------------------------------------------------------
 # delta codec: elementwise version-chain delta packing (sub for ints,
 # XOR-of-bits for floats so unchanged mantissa bytes zero out).
 # ---------------------------------------------------------------------------

@@ -65,6 +65,9 @@ class TieredStorePool:
       2. host -> disk: segmented ``save()`` to ``spill_root/<store>`` and
          drop the in-memory store. The next ``pool[name]`` reopens it with
          a lazy load, so only the segments a query touches are re-read.
+         Sharded stores (core/shard.py) take this tier one shard at a
+         time: the facade stays admitted with partial residency and only
+         leaves the pool when every shard is already on disk.
 
     The pool operates on the LIVE backing dict when given one (including a
     GeStore facade's ``stores`` dict): spilling removes the entry from
@@ -102,7 +105,8 @@ class TieredStorePool:
         self._epoch_floor: dict[str, int] = {}
         self._lru: OrderedDict[str, None] = OrderedDict(
             (n, None) for n in self._stores)
-        self.stats = {"demotions": 0, "spills": 0, "reloads": 0}
+        self.stats = {"demotions": 0, "spills": 0, "shard_spills": 0,
+                      "reloads": 0}
 
     def _spill_path(self, name: str) -> str | None:
         if self._facade is not None:
@@ -128,8 +132,11 @@ class TieredStorePool:
                 raise KeyError(name)
             # load first, forget the spill record only on success: a failed
             # reload (e.g. CorruptSegmentError) must keep surfacing instead
-            # of decaying into a KeyError on the next access
-            st = self._apply_floor(name, VersionedStore.load(path, lazy=True))
+            # of decaying into a KeyError on the next access. open_any_store
+            # dispatches on the directory flavor, so sharded stores round-
+            # trip through spills too.
+            from repro.core.shard import open_any_store
+            st = self._apply_floor(name, open_any_store(path, lazy=True))
             del self._spilled[name]
             self._stores[name] = st
             self.stats["reloads"] += 1
@@ -174,15 +181,29 @@ class TieredStorePool:
 
     def enforce(self) -> int:
         """Evict coldest-first until within budget; returns evictions
-        performed (a demotion and a spill each count one). Resident bytes
-        are computed once and maintained incrementally, so one call is one
-        walk over the pool, not O(stores) walks."""
+        performed (a demotion, a shard spill, and a whole-store spill each
+        count one). Resident bytes are computed once and maintained
+        incrementally, so one call is one walk over the pool, not
+        O(stores) walks.
+
+        Sharded stores (anything exposing ``spill_shard``) evict with
+        per-shard granularity: shards spill to disk one at a time (the
+        facade stays admitted with partial residency, reloading spilled
+        shards lazily on the next query), and only when every shard is
+        out does the facade itself leave the pool like a plain store."""
         if self.budget_bytes is None:
             return 0
         per_store = {name: sum(st.nbytes().values())
                      for name, st in self._stores.items()}
         total = sum(per_store.values())
         n = 0
+
+        def recount(name, st):
+            nonlocal total
+            now = sum(st.nbytes().values())
+            total -= per_store[name] - now
+            per_store[name] = now
+
         # coldest first; stores never served via the pool come last
         order = list(self._lru) + [m for m in self._stores
                                    if m not in self._lru]
@@ -192,25 +213,35 @@ class TieredStorePool:
             st = self._stores.get(name)
             if st is None:
                 continue
-            if st._superlog is not None:            # tier 1: device -> host
+            if st.has_device_state():               # tier 1: device -> host
                 st.drop_superlog()
                 self.stats["demotions"] += 1
                 n += 1
-                now = sum(st.nbytes().values())
-                total -= per_store[name] - now
-                per_store[name] = now
+                recount(name, st)
                 if total <= self.budget_bytes:
                     break
             path = self._spill_path(name)
-            if path is not None:                    # tier 2: host -> disk
-                st.save(path)
-                self._epoch_floor[name] = st.log_epoch + 1
-                self._spilled[name] = path
-                del self._stores[name]
-                self._lru.pop(name, None)
-                total -= per_store.pop(name, 0)
-                self.stats["spills"] += 1
-                n += 1
+            if path is None:
+                continue
+            if hasattr(st, "spill_shard"):          # tier 2a: shard by shard
+                while (total > self.budget_bytes
+                       and st.spill_shard(root=path) is not None):
+                    self.stats["shard_spills"] += 1
+                    n += 1
+                    recount(name, st)
+                if st.resident_shard_ids():
+                    continue  # partial residency: the facade stays admitted
+                # every shard on disk: fall through and drop the facade too
+                # — its key index is unaccounted host memory (save() below
+                # costs one manifest re-commit at most)
+            st.save(path)                           # tier 2: host -> disk
+            self._epoch_floor[name] = st.log_epoch + 1
+            self._spilled[name] = path
+            del self._stores[name]
+            self._lru.pop(name, None)
+            total -= per_store.pop(name, 0)
+            self.stats["spills"] += 1
+            n += 1
         return n
 
 

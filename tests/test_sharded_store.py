@@ -1,0 +1,511 @@
+"""Sharded meta-database engine (core/shard.py + kernels/shard_route.py):
+routing stability, byte-identical scatter-gather equivalence with the
+unsharded store, per-shard persistence, and tiered-memory integration."""
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st as hst
+
+from repro.core.shard import ShardedStore, open_any_store
+from repro.core.store import FieldSchema, VersionedStore
+from repro.kernels import ref
+from repro.kernels.shard_route import (key_lanes, merge_shard_rows,
+                                       route_keys, shard_route)
+
+SCHEMA = [FieldSchema("seq", 6, "int32"), FieldSchema("len", 1, "int32")]
+SHARD_COUNTS = (1, 2, 5)
+
+
+# -- routing ------------------------------------------------------------------
+
+def test_route_width_stable():
+    """The same key routes identically no matter how wide its batch was
+    padded — the property that makes the hash a persistent partitioner."""
+    keys = [b"", b"a", b"a\x00\x00\x00\x00", b"P12345",
+            b"a-much-longer-key-with-\x00-bytes-inside-it"]
+    batch = route_keys(keys, 7)
+    solo = np.array([route_keys([k], 7)[0] for k in keys])
+    assert np.array_equal(batch, solo)
+
+
+def test_route_kernel_matches_ref():
+    keys = [f"K{i:06d}".encode() for i in range(1500)] + [b"", b"\x00\x00"]
+    lanes, lens = key_lanes(keys)
+    import jax.numpy as jnp
+    got = shard_route(jnp.asarray(lanes), jnp.asarray(lens), 5,
+                      interpret=True)
+    want = ref.ref_shard_route(jnp.asarray(lanes), jnp.asarray(lens), 5)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(want).min() >= 0 and np.asarray(want).max() < 5
+
+
+def test_route_reasonably_balanced():
+    r = route_keys([f"P{i:08d}".encode() for i in range(5000)], 4)
+    counts = np.bincount(r, minlength=4)
+    assert counts.min() > 5000 / 4 * 0.7  # no pathological skew
+
+
+def test_route_rejects_bad_shard_count():
+    with pytest.raises(ValueError):
+        route_keys([b"k"], 0)
+
+
+def test_merge_shard_rows_reproduces_global_order():
+    parts = [np.array([0, 3, 9]), np.array([], np.int64), np.array([1, 4])]
+    rows, order = merge_shard_rows(parts)
+    assert rows.tolist() == [0, 1, 3, 4, 9]
+    assert np.concatenate(parts)[order].tolist() == rows.tolist()
+
+
+# -- equivalence --------------------------------------------------------------
+
+def assert_view_equal(a, b):
+    assert a.ts == b.ts and a.keys == b.keys
+    assert np.array_equal(a.row_idx, b.row_idx)
+    assert a.row_idx.dtype == b.row_idx.dtype
+    assert set(a.values) == set(b.values)
+    for f in a.values:
+        assert a.values[f].dtype == b.values[f].dtype, f
+        assert np.array_equal(a.values[f], b.values[f]), f
+
+
+def assert_inc_equal(a, b):
+    assert (a.t0, a.t1, a.keys) == (b.t0, b.t1, b.keys)
+    assert np.array_equal(a.row_idx, b.row_idx)
+    assert np.array_equal(a.kind, b.kind)
+    for f in a.values:
+        assert np.array_equal(a.values[f], b.values[f]), f
+
+
+def scripted_history(store, rng):
+    """Releases exercising new/updated/deleted rows, schema evolution with
+    int64 narrowing, patch semantics, and explicit deletes."""
+    keys = [f"K{i:04d}" for i in range(30)]
+    t1 = {"seq": rng.integers(0, 9, (30, 6)).astype(np.int32),
+          "len": rng.integers(1, 9, (30, 1)).astype(np.int32)}
+    infos = [store.update(10, keys, t1)]
+    keys2 = keys[:24] + ["N0", "N1", "N2"]
+    t2 = {"seq": np.concatenate(
+              [t1["seq"][:24], rng.integers(0, 9, (3, 6))]).astype(np.int32),
+          "len": np.concatenate(
+              [t1["len"][:24], rng.integers(1, 9, (3, 1))]).astype(np.int32),
+          "ann": np.arange(27 * 2).reshape(27, 2)}  # int64 -> int32 narrowing
+    t2["seq"][5] += 1
+    infos.append(store.update(20, keys2, t2))
+    infos.append(store.delete(25, ["K0003", "N1"]))
+    infos.append(store.update(
+        30, ["K0001", "Z9"],
+        {"seq": rng.integers(0, 9, (2, 6)).astype(np.int32),
+         "len": np.ones((2, 1), np.int32),
+         "ann": np.zeros((2, 2), np.int32)},
+        full_release=False))
+    return infos
+
+
+def mk_pair(n_shards):
+    a = VersionedStore("up", SCHEMA)
+    b = ShardedStore("up", SCHEMA, n_shards=n_shards)
+    ia = scripted_history(a, np.random.default_rng(7))
+    ib = scripted_history(b, np.random.default_rng(7))
+    return a, b, ia, ib
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_scatter_gather_equivalence(n_shards):
+    a, b, ia, ib = mk_pair(n_shards)
+    assert ia == ib  # VersionInfo counts aggregate exactly
+    ts = [10, 20, 25, 30]
+    for va, vb in zip(a.get_versions(ts), b.get_versions(ts)):
+        assert_view_equal(va, vb)
+    for va, vb in zip(a.get_versions(ts, include_deleted=True),
+                      b.get_versions(ts, include_deleted=True)):
+        assert_view_equal(va, vb)
+    pairs = [(10, 20), (20, 25), (10, 30), (25, 30), (10, 20)]
+    for xa, xb in zip(a.get_increments(pairs, significant_fields=["seq"]),
+                      b.get_increments(pairs, significant_fields=["seq"])):
+        assert_inc_equal(xa, xb)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_equivalence_with_filter_and_fields(n_shards):
+    a, b, _, _ = mk_pair(n_shards)
+    va = a.get_versions([20, 30], fields=["seq"], key_filter=b"K000")
+    vb = b.get_versions([20, 30], fields=["seq"], key_filter=b"K000")
+    for x, y in zip(va, vb):
+        assert_view_equal(x, y)
+    xa = a.get_increment(10, 30, fields=[])
+    xb = b.get_increment(10, 30, fields=[])
+    assert_inc_equal(xa, xb)
+
+
+def test_save_load_round_trip_equivalence(tmp_path):
+    a, b, _, _ = mk_pair(3)
+    b.save(str(tmp_path / "up"))
+    b2 = ShardedStore.load(str(tmp_path / "up"))
+    for t in (10, 20, 25, 30):
+        assert_view_equal(a.get_version(t), b2.get_version(t))
+    assert_inc_equal(a.get_increment(10, 30), b2.get_increment(10, 30))
+    # incremental per-shard save after reload-and-mutate
+    b2.update(40, ["K0001"], {"seq": np.ones((1, 6), np.int32),
+                              "len": np.ones((1, 1), np.int32),
+                              "ann": np.ones((1, 2), np.int32)},
+              full_release=False)
+    stats = b2.save(str(tmp_path / "up"))
+    assert stats["mode"] == "incremental"
+    a.update(40, ["K0001"], {"seq": np.ones((1, 6), np.int32),
+                             "len": np.ones((1, 1), np.int32),
+                             "ann": np.ones((1, 2), np.int32)},
+             full_release=False)
+    b3 = open_any_store(str(tmp_path / "up"))
+    assert isinstance(b3, ShardedStore)
+    assert_view_equal(a.get_version(40), b3.get_version(40))
+
+
+def test_compact_equivalence(tmp_path):
+    a, b, _, _ = mk_pair(2)
+    b.save(str(tmp_path / "up"))
+    sa = a.compact(22)
+    sb = b.compact(22, path=str(tmp_path / "up"))
+    assert sa["cells_dropped"] == sb["cells_dropped"]
+    assert sa["versions_kept"] == sb["versions_kept"]
+    assert [v.ts for v in a.versions] == [v.ts for v in b.versions]
+    assert a.versions[0].n_entries == b.versions[0].n_entries
+    for t in (25, 30):
+        assert_view_equal(a.get_version(t), b.get_version(t))
+    b2 = ShardedStore.load(str(tmp_path / "up"))
+    for t in (25, 30):
+        assert_view_equal(a.get_version(t), b2.get_version(t))
+
+
+def test_monotonic_ts_and_unknown_key_guards():
+    _, b, _, _ = mk_pair(2)
+    with pytest.raises(ValueError):
+        b.update(30, ["X"], {"seq": np.zeros((1, 6), np.int32),
+                             "len": np.zeros((1, 1), np.int32)})
+    epoch = b.log_epoch
+    with pytest.raises(KeyError):
+        b.delete(50, ["NEVER-SEEN"])
+    assert b.log_epoch == epoch  # guard fired before any shard mutated
+
+
+def test_load_rejects_foreign_routing(tmp_path):
+    import json, os
+    _, b, _, _ = mk_pair(2)
+    b.save(str(tmp_path / "up"))
+    p = os.path.join(str(tmp_path / "up"), "SHARD_MANIFEST.json")
+    man = json.load(open(p))
+    man["routing"] = "some-other-hash-v9"
+    json.dump(man, open(p, "w"))
+    with pytest.raises(ValueError, match="routing"):
+        ShardedStore.load(str(tmp_path / "up"))
+
+
+# -- epoch contract + tiered memory ------------------------------------------
+
+def test_epoch_monotone_and_floorable():
+    _, b, _, _ = mk_pair(2)
+    e0 = b.log_epoch
+    b.update(50, ["K0000"], {"seq": np.zeros((1, 6), np.int32),
+                             "len": np.zeros((1, 1), np.int32),
+                             "ann": np.zeros((1, 2), np.int32)},
+             full_release=False)
+    e1 = b.log_epoch
+    assert e1 > e0
+    b._log_epoch = e1 + 100           # the pool's floor assignment
+    assert b.log_epoch == e1 + 100
+
+
+def test_shard_spill_partial_residency(tmp_path):
+    a, b, _, _ = mk_pair(3)
+    b.save(str(tmp_path / "up"))
+    e0 = b.log_epoch
+    freed = b.spill_shard()
+    assert freed and freed > 0
+    assert len(b.resident_shard_ids()) == 2
+    assert b.nbytes()["host"] > 0
+    assert b.log_epoch >= e0            # spilled shard's epoch is frozen in
+    assert_view_equal(a.get_version(20), b.get_version(20))  # lazy reload
+    assert len(b.resident_shard_ids()) == 3
+    while b.spill_shard() is not None:
+        pass
+    assert b.resident_shard_ids() == []
+    assert b.nbytes() == {"host": 0, "device": 0}
+    assert_view_equal(a.get_version(30), b.get_version(30))
+
+
+def test_pool_spills_sharded_store_shard_by_shard(tmp_path):
+    from repro.serve import TieredStorePool
+    a, b, _, _ = mk_pair(3)
+    want = a.get_version(20)
+    pool = TieredStorePool({"up": b},
+                           budget_bytes=sum(b.nbytes().values()) - 1,
+                           spill_root=str(tmp_path))
+    assert pool.enforce() >= 1
+    assert pool.stats["shard_spills"] >= 1
+    assert pool.stats["spills"] == 0          # facade stays admitted
+    assert len(b.resident_shard_ids()) < 3    # partial residency
+    assert_view_equal(want, pool["up"].get_version(20))
+
+
+def test_service_over_sharded_store(tmp_path):
+    from repro.serve import GeStoreService
+    from repro.serve.gestore_service import VersionRequest
+    a, b, _, _ = mk_pair(2)
+    svc = GeStoreService({"up": b}, memory_budget_bytes=1,
+                         spill_root=str(tmp_path))
+    got = svc.materialize([VersionRequest("up", 20, ("seq",)),
+                           VersionRequest("up", 30, ("seq",))])
+    want = a.get_versions([20, 30], fields=["seq"])
+    for w, g in zip(want, got):
+        assert w.keys == g.keys
+        assert np.array_equal(w.values["seq"], g.values["seq"])
+    assert svc.pool.stats["shard_spills"] >= 1
+    got2 = svc.materialize([VersionRequest("up", 20, ("seq",))])[0]
+    assert got2.keys == want[0].keys          # post-spill reload serves same
+
+
+def test_spill_keeps_directory_loadable(tmp_path):
+    """A per-shard spill must commit a manifest consistent with every
+    shard directory: a fresh process opening the store right after the
+    spill sees the post-mutation state, never a bricked or stale one."""
+    _, b, _, _ = mk_pair(3)
+    b.save(str(tmp_path / "up"))
+    b.update(50, ["NEWKEY"], {"seq": np.ones((1, 6), np.int32),
+                              "len": np.ones((1, 1), np.int32),
+                              "ann": np.ones((1, 2), np.int32)},
+             full_release=False)                   # not flushed yet
+    assert b.spill_shard() is not None
+    b2 = ShardedStore.load(str(tmp_path / "up"))   # "fresh process"
+    assert b"NEWKEY" in b2.key_to_row
+    assert_view_equal(b.get_version(50), b2.get_version(50))
+
+
+def test_rejected_release_registers_no_phantom_fields_sharded():
+    _, b, _, _ = mk_pair(2)
+    with pytest.raises(ValueError, match="int32 range"):
+        b.update(99, ["K0000"],
+                 {"newf": np.ones((1, 1), np.int32),
+                  "len": np.full((1, 1), 2**40, np.int64)},
+                 full_release=False)
+    with pytest.raises(TypeError):                 # unconvertible key
+        b.update(99, ["K0000", 3.5],
+                 {"newf": np.ones((2, 1), np.int32),
+                  "len": np.ones((2, 1), np.int32),
+                  "seq": np.ones((2, 6), np.int32),
+                  "ann": np.ones((2, 2), np.int32)},
+                 full_release=False)
+    assert "newf" not in b.schema
+    for s in range(b.n_shards):
+        assert "newf" not in b.shard(s).fields
+
+
+def test_save_to_new_dir_with_spilled_shards(tmp_path):
+    """Saving a partially spilled store to a DIFFERENT directory must
+    write every shard there (reloading spilled ones), and spilling into a
+    new root must not skip the save that makes the shard reloadable."""
+    a, b, _, _ = mk_pair(3)
+    b.save(str(tmp_path / "A"))
+    assert b.spill_shard() is not None            # shard 0 lives in A only
+    b.save(str(tmp_path / "B"))                   # "backup" to a new dir
+    b2 = ShardedStore.load(str(tmp_path / "B"))
+    assert_view_equal(a.get_version(30), b2.get_version(30))
+    # clean store, spill retargeted to a fresh root: must save there first
+    c = ShardedStore.load(str(tmp_path / "B"))
+    assert c.spill_shard(root=str(tmp_path / "C")) is not None
+    assert_view_equal(a.get_version(30), c.get_version(30))
+
+
+def test_monotonic_floor_sees_spilled_shards(tmp_path):
+    """A crash-skewed shard that is currently spilled must still raise
+    the monotonicity error BEFORE the facade allocates rows or mutates
+    other shards (the floor is computed after residency is forced)."""
+    _, b, _, _ = mk_pair(2)
+    b.save(str(tmp_path / "up"))
+    b._shards[0].update(77, [], {}, full_release=False)   # simulated skew
+    b.spill_shard(0)
+    rows_before = list(b.row_keys)
+    with pytest.raises(ValueError, match="monotonic"):
+        b.update(77, ["BRANDNEW"], {"seq": np.ones((1, 6), np.int32),
+                                    "len": np.ones((1, 1), np.int32),
+                                    "ann": np.ones((1, 2), np.int32)},
+                 full_release=False)
+    assert b.row_keys == rows_before                      # no phantom rows
+    for s in range(b.n_shards):
+        assert b.shard(s).last_ts != 77 or s == 0         # shard 1 untouched
+
+
+def test_torn_save_recovers_on_load(tmp_path):
+    """save() commits shard dirs first, shard manifest last: a crash in
+    between (simulated by restoring the pre-release manifest) must leave
+    the store loadable, with the torn release's committed keys adopted."""
+    import shutil
+    _, b, _, _ = mk_pair(2)
+    b.save(str(tmp_path / "up"))
+    man = str(tmp_path / "up" / "SHARD_MANIFEST.json")
+    shutil.copy(man, str(tmp_path / "man.bak"))
+    b.update(60, ["TORNKEY"], {"seq": np.ones((1, 6), np.int32),
+                               "len": np.ones((1, 1), np.int32),
+                               "ann": np.ones((1, 2), np.int32)},
+             full_release=False)
+    b.save(str(tmp_path / "up"))
+    shutil.copy(str(tmp_path / "man.bak"), man)   # crash before manifest
+    b2 = ShardedStore.load(str(tmp_path / "up"))
+    assert b"TORNKEY" in b2.key_to_row            # adopted, not bricked
+    v = b2.get_version(60)
+    assert b"TORNKEY" in v.keys
+    # recovered facade is save-dirty: the next spill re-commits the manifest
+    assert b2.spill_shard() is not None
+    b3 = ShardedStore.load(str(tmp_path / "up"))
+    assert b"TORNKEY" in b3.key_to_row
+
+
+def test_pool_drops_fully_spilled_facade(tmp_path):
+    """Once every shard is on disk the facade itself leaves the pool (its
+    key index is host memory too) and reloads transparently."""
+    from repro.serve import TieredStorePool
+    a, b, _, _ = mk_pair(2)
+    want = a.get_version(30)
+    pool = TieredStorePool({"up": b}, budget_bytes=1,
+                           spill_root=str(tmp_path))
+    assert pool.enforce() >= 2
+    assert "up" not in pool._stores and "up" in pool
+    re = pool["up"]                               # sharded reload
+    assert isinstance(re, ShardedStore)
+    assert_view_equal(want, re.get_version(30))
+
+
+def test_corrupt_shard_fails_before_any_mutation(tmp_path):
+    """A shard whose reload raises (corrupt segment) must abort update()
+    BEFORE any other shard ingests the release — otherwise the facade's
+    global row order and the shard histories desync for good."""
+    import glob
+    from repro.core.segments import CorruptSegmentError
+    _, b, _, _ = mk_pair(3)
+    b.save(str(tmp_path / "up"))
+    while b.spill_shard() is not None:
+        pass
+    seg = sorted(glob.glob(str(tmp_path / "up" / "shard-00001" / "segments"
+                               / "**" / "*.npz"), recursive=True))[0]
+    with open(seg, "r+b") as f:
+        f.truncate(8)                              # torn write
+    versions_before = list(b.versions)
+    with pytest.raises(CorruptSegmentError):
+        b.update(99, ["K0000"], {"seq": np.ones((1, 6), np.int32),
+                                 "len": np.ones((1, 1), np.int32),
+                                 "ann": np.ones((1, 2), np.int32)},
+                 full_release=False)
+    assert b.versions == versions_before
+    for s in b.resident_shard_ids():               # no shard saw ts=99
+        assert b._shards[s].last_ts < 99
+
+
+# -- GeStore wiring -----------------------------------------------------------
+
+def test_gestore_creates_flushes_and_reopens_sharded(tmp_path):
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=8, desc_width=2))
+    gs = core.GeStore(str(tmp_path / "gs"), reg)
+    gs.add_release("up", 1, ">A x\nACDE\n>B y\nACDF\n", parser_name="fasta",
+                   shards=2)
+    assert isinstance(gs.stores["up"], ShardedStore)
+    gs.add_release("up", 2, ">A x\nACDE\n>C z\nGGGG\n", parser_name="fasta")
+    stats = gs.flush()
+    assert stats["up"]["n_shards"] == 2
+    gs2 = core.GeStore(str(tmp_path / "gs"), reg)     # autoload
+    st = gs2.open_store("up")
+    assert isinstance(st, ShardedStore)
+    assert sorted(st.get_version(2).keys) == [b"A", b"C"]
+    inc = st.get_increment(1, 2)
+    assert set(inc.keys) == {b"B", b"C"}
+    with pytest.raises(ValueError):
+        gs2.create_store("up", [], shards=3)          # name collision
+
+
+# -- satellite: bounded VersionCache ------------------------------------------
+
+def test_version_cache_byte_budget(tmp_path):
+    from repro.core.cache import VersionCache
+    cache = VersionCache(str(tmp_path / "c"), max_bytes=64)
+
+    def put(i):
+        return cache.put(f"file-{i}|0|1", lambda p: open(p, "w").write("x" * 40),
+                         suffix=".txt")
+    import os
+    p0 = put(0)
+    assert os.path.exists(p0)          # within budget
+    p1 = put(1)
+    assert os.path.exists(p1)          # the just-put file is protected...
+    assert not os.path.exists(p0)      # ...the LRU one was evicted
+    assert cache.get("file-0|0|1") is None
+
+
+def test_gestore_cache_budget_wired(tmp_path):
+    import repro.core as core
+    from repro.core.parsers import FastaParser
+    reg = core.PluginRegistry()
+    reg.register_parser(FastaParser(seq_width=8, desc_width=2))
+    gs = core.GeStore(str(tmp_path / "gs"), reg, cache_max_bytes=123)
+    assert gs.cache.max_bytes == 123
+
+
+# -- property test: random histories (runs when hypothesis is installed) ------
+
+@settings(max_examples=12, deadline=None)
+@given(hst.data())
+def test_shard_equivalence_property(data):
+    """ShardedStore with N in {1,2,5} returns byte-identical
+    get_versions/get_increments to an unsharded store over random
+    update/delete histories, including after a save/load round trip."""
+    import tempfile
+    key_pool = [f"K{i:02d}".encode() for i in range(18)]
+    n_rel = data.draw(hst.integers(2, 5), label="n_releases")
+    history = []
+    ts = 0
+    for _ in range(n_rel):
+        ts += data.draw(hst.integers(1, 5), label="dt")
+        op = data.draw(hst.sampled_from(["full", "patch", "delete"]),
+                       label="op")
+        ks = data.draw(
+            hst.lists(hst.sampled_from(key_pool), min_size=0, max_size=12,
+                      unique=True),
+            label="keys")
+        vals = data.draw(
+            hst.lists(hst.integers(-5, 5), min_size=len(ks) * 3,
+                      max_size=len(ks) * 3),
+            label="vals")
+        history.append((op, ts, ks, vals))
+
+    def build(store):
+        seen = set()
+        for op, t, ks, vals in history:
+            if op == "delete":
+                known = [k for k in ks if k in seen]
+                store.delete(t, known) if known else None
+                if not known:
+                    store.update(t, [], {}, full_release=False)
+                continue
+            table = {"f": np.asarray(vals, np.int32).reshape(len(ks), 3)}
+            store.update(t, ks, table, full_release=(op == "full"))
+            if op == "full":
+                seen -= {k for k in seen if k not in ks}
+            seen |= set(ks)
+        return store
+
+    a = build(VersionedStore("p", [FieldSchema("f", 3, "int32")]))
+    all_ts = [t for _, t, _, _ in history]
+    pairs = [(t0, t1) for t0 in all_ts for t1 in all_ts if t0 < t1]
+    for n in SHARD_COUNTS:
+        b = build(ShardedStore("p", [FieldSchema("f", 3, "int32")],
+                               n_shards=n))
+        for va, vb in zip(a.get_versions(all_ts), b.get_versions(all_ts)):
+            assert_view_equal(va, vb)
+        for xa, xb in zip(a.get_increments(pairs), b.get_increments(pairs)):
+            assert_inc_equal(xa, xb)
+        with tempfile.TemporaryDirectory() as d:
+            b.save(d + "/s")
+            b2 = ShardedStore.load(d + "/s")
+            for va, vb in zip(a.get_versions(all_ts),
+                              b2.get_versions(all_ts)):
+                assert_view_equal(va, vb)

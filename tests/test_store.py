@@ -187,3 +187,41 @@ def test_compaction_preserves_recent_versions(rng):
     st_.update(60, keys[5:10], {"a": np.zeros((5, 3), np.int32)},
                full_release=False)
     assert len(st_.get_version(60)) == 24  # k3 still deleted
+
+
+def test_rejected_release_leaves_store_unmutated():
+    """A release rejected on its Nth field (value-range cast failure) must
+    not leave the earlier fields' cells — or its new rows — behind."""
+    st = VersionedStore("r", [FieldSchema("a", 1, "int32"),
+                              FieldSchema("b", 1, "int16")])
+    st.update(1, ["k"], {"a": np.ones((1, 1), np.int32),
+                         "b": np.ones((1, 1), np.int16)})
+    epoch = st.log_epoch
+    with pytest.raises(ValueError, match="int16 range"):
+        st.update(2, ["k", "k2"], {"a": np.full((2, 1), 7, np.int32),
+                                   "b": np.full((2, 1), 70000, np.int32)})
+    assert st.last_ts == 1 and st.log_epoch == epoch
+    assert st.n_rows == 1 and b"k2" not in st.key_to_row
+    v = st.get_version(2)
+    assert v.keys == [b"k"]
+    assert v.values["a"].tolist() == [[1]]  # nothing of ts=2 is visible
+
+
+def test_rejected_release_registers_no_phantom_fields():
+    """Schema evolution must not survive a rejected release: a new field
+    in the same update as an invalid one stays unregistered."""
+    st = VersionedStore("r2", [FieldSchema("b", 1, "int16")])
+    st.update(1, ["k"], {"b": np.ones((1, 1), np.int16)})
+    with pytest.raises(ValueError, match="int16 range"):
+        st.update(2, ["k"], {"c": np.ones((1, 1), np.int32),
+                             "b": np.full((1, 1), 70000, np.int32)})
+    assert "c" not in st.fields
+    assert "c" not in st.get_version(1).values
+
+
+def test_unconvertible_key_registers_no_phantom_fields():
+    st = VersionedStore("r3", [FieldSchema("b", 1, "int32")])
+    with pytest.raises(TypeError):
+        st.update(1, ["k", 3.5], {"c": np.ones((2, 1), np.int32),
+                                  "b": np.ones((2, 1), np.int32)})
+    assert "c" not in st.fields and st.n_rows == 0
