@@ -17,6 +17,15 @@ import os
 import sys
 import traceback
 
+# BENCH_DEVICES=N forces N host CPU devices (the device-parallel sharded
+# rows in table7 need a real mesh). The count is locked at first jax init,
+# so this must run at module top — before the benchmark modules import.
+_DEV = os.environ.get("BENCH_DEVICES", "").strip()
+if _DEV and _DEV != "0":
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_DEV)}").strip()
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _RESULTS = os.path.join(_ROOT, "BENCH_results.json")
 

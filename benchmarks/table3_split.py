@@ -7,7 +7,6 @@ from __future__ import annotations
 import os
 import tempfile
 
-import numpy as np
 
 from repro.core.store import FieldSchema, VersionedStore
 

@@ -22,7 +22,6 @@ import shutil
 import tempfile
 import time
 
-import numpy as np
 
 from repro.core import segments
 from repro.core.store import FieldSchema, VersionedStore

@@ -7,17 +7,25 @@ into a ShardedStore at several shard counts (1 = the unsharded baseline
 path wrapped in the facade) and measures update (scatter) throughput and
 batched get_versions (scatter-gather materialization) throughput.
 
-On one host the shards run sequentially, so this measures the facade's
-overhead floor and per-shard scaling shape, not multi-host speedup — the
-derived fields record per-shard work sizes so the N-host projection is just
-a division. BENCH_SHARDS picks the shard counts (comma-separated), e.g.
-the CI smoke sets ``BENCH_SHARDS=1,2`` to exercise the scatter-gather path
-cheaply.
+Each shard count reports the serial per-shard loop AND the device-parallel
+placement (core/placement.py) side by side: with BENCH_DEVICES=N (run.py
+forces N host CPU devices before jax initializes) the parallel rows run one
+shard per device over a ("shard",) mesh; with fewer devices than shards they
+fall back to one stacked launch, which still amortizes per-shard launch
+overhead. Every get_versions row's derived field records ``devices=`` and
+``mode=`` so results across device counts never get conflated, and the
+parallel rows carry ``vs_serial=`` — the speedup over the serial loop on
+the identical store. BENCH_SHARDS picks the shard counts (comma-separated),
+e.g. the CI smoke sets ``BENCH_SHARDS=1,2`` to exercise the scatter-gather
+path cheaply.
 """
 from __future__ import annotations
 
 import os
 
+import jax
+
+from repro.core.placement import plan_placement
 from repro.core.shard import ShardedStore
 from repro.core.store import FieldSchema
 
@@ -47,7 +55,8 @@ def _releases():
 def run() -> list[tuple[str, float, str]]:
     rels = _releases()
     rows = []
-    base_update = base_query = None
+    n_dev = len(jax.devices())
+    base_update = base_query = base_par = None
     # the relative column is named for the shard count it is relative to:
     # BENCH_SHARDS need not include 1
     rel_label = f"rel_s{SHARDS[0]}"
@@ -68,14 +77,26 @@ def run() -> list[tuple[str, float, str]]:
         def wave():
             return st.get_versions(ts_list, fields=FIELDS)
 
+        # serial vs device-parallel on the SAME ingested store (the two
+        # paths are byte-identical; only the execution strategy differs)
+        st.placement = plan_placement(s, force="serial")
         t_q, _ = timeit(wave, reps=2, warmup=1)
+        st.placement = plan_placement(s, force="parallel")
+        mode = st.placement.mode
+        t_p, _ = timeit(wave, reps=2, warmup=1)
         if base_update is None:
-            base_update, base_query = t_upd, t_q
+            base_update, base_query, base_par = t_upd, t_q, t_p
         rows.append((f"table7.update_s{s}", t_upd * 1e6 / len(rels[-1][0]),
                      f"entries_per_s={len(rels[-1][0]) / t_upd:.0f};"
                      f"{rel_label}={base_update / t_upd:.2f}x"))
         rows.append((f"table7.get_versions_s{s}_q{Q}", t_q * 1e6 / Q,
                      f"versions_per_s={Q / t_q:.1f};"
                      f"{rel_label}={base_query / t_q:.2f}x;"
-                     f"rows_per_shard={st.n_rows // s}"))
+                     f"rows_per_shard={st.n_rows // s};"
+                     f"devices={n_dev};mode=serial"))
+        rows.append((f"table7.get_versions_par_s{s}_q{Q}", t_p * 1e6 / Q,
+                     f"versions_per_s={Q / t_p:.1f};"
+                     f"{rel_label}={base_par / t_p:.2f}x;"
+                     f"vs_serial={t_q / t_p:.2f}x;"
+                     f"devices={n_dev};mode={mode}"))
     return rows

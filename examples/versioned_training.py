@@ -12,7 +12,6 @@ Run: PYTHONPATH=src python examples/versioned_training.py [--steps N]
 import argparse
 import tempfile
 
-import numpy as np
 
 from repro.configs.base import RunConfig, get_smoke_config
 from repro.data.pipeline import DataConfig, TokenPipeline

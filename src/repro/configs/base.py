@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

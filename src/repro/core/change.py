@@ -9,7 +9,6 @@ covering every field.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 from .store import Increment, KIND_DELETED, KIND_NEW, KIND_UPDATED
 

@@ -10,11 +10,11 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Callable, Iterable, Sequence
+from typing import Iterable, Sequence
 
 import numpy as np
 
-from .store import FieldSchema, Increment, VersionedStore, VersionView
+from .store import FieldSchema, Increment, VersionView
 
 
 class FileParser(abc.ABC):

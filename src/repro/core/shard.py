@@ -36,6 +36,12 @@ Design invariants:
     access; ``log_epoch`` is the sum of shard epochs plus a floorable base,
     so the serve-layer plan-cache contract (equal epoch => identical bytes)
     survives per-shard spills exactly as it does whole-store ones.
+  * **Device-parallel execution is pure placement** — under a parallel
+    ``core/placement.py`` plan the per-shard fused-superlog scans collapse
+    into ONE stacked launch (one shard per device on a ``("shard",)``
+    mesh), but the math per shard is exactly the serial loop's, so
+    serial/stacked/mesh modes return byte-identical results across any
+    device count — the equivalence suite pins this.
 """
 from __future__ import annotations
 
@@ -49,9 +55,10 @@ import numpy as np
 from repro.kernels.shard_route import (ROUTING_VERSION, merge_shard_rows,
                                        route_keys)
 
-from .store import (FieldSchema, Increment, Timestamp, VersionInfo,
-                    VersionView, VersionedStore, _checked_cast,
-                    infer_field_schema)
+from .placement import PlacedSuperLog, ShardPlacement, plan_placement
+from .store import (KIND_DELETED, KIND_UPDATED, FieldSchema,
+                    Increment, Timestamp, VersionInfo, VersionView,
+                    VersionedStore, _checked_cast, infer_field_schema)
 
 SHARD_FORMAT = "gestore-shards-v1"
 SHARD_MANIFEST_NAME = "SHARD_MANIFEST.json"
@@ -140,6 +147,12 @@ class ShardedStore:
         self._dir: str | None = None               # set by save()/load()
         self._epoch_base = 0
         self._saved_epoch: int | None = None       # log_epoch at last save()
+        # device-parallel execution (core/placement.py): planned lazily on
+        # first query; the cross-shard stacked superlog is cached keyed on
+        # the per-shard epoch tuple (so it survives spill/reload cycles,
+        # which freeze and floor the epoch without changing content)
+        self._placement: ShardPlacement | None = None
+        self._placed: PlacedSuperLog | None = None
         for fs in schema:
             self.schema[fs.name] = fs
 
@@ -223,25 +236,81 @@ class ShardedStore:
         return None
 
     def has_device_state(self) -> bool:
-        return any(sh is not None and sh._superlog is not None
-                   for sh in self._shards)
+        return (self._placed is not None
+                or any(sh is not None and sh._superlog is not None
+                       for sh in self._shards))
 
     def drop_superlog(self) -> None:
-        """Release every resident shard's device-resident superlog."""
+        """Release every shard's device-resident superlog AND the
+        cross-shard stacked copy (device -> host demotion)."""
+        self._placed = None
         for sh in self._shards:
             if sh is not None:
                 sh.drop_superlog()
 
     def nbytes(self) -> dict:
         """Resident-memory accounting summed over resident shards (spilled
-        shards count zero — their cells live on disk)."""
+        shards count zero — their cells live on disk). The device tier
+        includes the stacked cross-shard superlog, so the tiered pool's
+        device->host demotion reclaims it too."""
         out = {"host": 0, "device": 0}
         for sh in self._shards:
             if sh is not None:
                 nb = sh.nbytes()
                 out["host"] += nb["host"]
                 out["device"] += nb["device"]
+        if self._placed is not None:
+            out["device"] += self._placed.nbytes()
         return out
+
+    # -- shard->device placement (core/placement.py) --------------------------
+    @property
+    def placement(self) -> ShardPlacement:
+        """Shard->device execution plan, auto-planned on first use (mesh
+        when the host has a device per shard, else serial; see
+        ``plan_placement``). Assign to override — the serving pool pins
+        one per store so every replica plans identically."""
+        if self._placement is None:
+            self._placement = plan_placement(self.n_shards)
+        return self._placement
+
+    @placement.setter
+    def placement(self, value: ShardPlacement) -> None:
+        self._placement = value
+        self._placed = None
+
+    def _placed_superlog(self) -> tuple[PlacedSuperLog, list]:
+        """(stacked cross-shard superlog, per-shard superlogs), forcing
+        residency and (re)pinning each shard to its placed device first.
+        Cached on the per-shard epoch tuple: spill/reload cycles freeze
+        and floor epochs without changing content, so an equal tuple means
+        the stacked device copy is still byte-valid."""
+        pl = self.placement
+        shards = [self.shard(s) for s in range(self.n_shards)]
+        for s, sh in enumerate(shards):
+            dev = pl.device_for(s)
+            sh.device = dev
+            if sh._superlog is not None and sh._superlog.device is not dev:
+                sh._superlog = None  # repin: epoch unchanged => same bytes
+        sls = [sh.superlog() for sh in shards]
+        epochs = tuple(sl.epoch for sl in sls)
+        if self._placed is None or self._placed.epochs != epochs:
+            self._placed = PlacedSuperLog(sls, pl)
+        return self._placed, sls
+
+    def _use_parallel(self, n_queries: int) -> bool:
+        """Route this query through the device-parallel stacked path?
+        Serial when the placement says so, and for a single distinct
+        timestamp against any cold shard — that is the per-field
+        ``select_at`` path whose lazy segment reads the stacked build
+        would defeat (mirrors ``VersionedStore.get_versions``)."""
+        if not self.placement.parallel:
+            return False
+        if n_queries == 1 and not all(
+                sh is not None and sh._superlog_fresh()
+                for sh in self._shards):
+            return False
+        return True
 
     # -- API parity helpers ---------------------------------------------------
     @property
@@ -415,15 +484,24 @@ class ShardedStore:
                      include_deleted: bool = False) -> list[VersionView]:
         """Batched get_versions, fanned out to every shard's fused-superlog
         scan and merged back into global (unsharded) row order. Duplicate
-        timestamps share one merged view, as in ``VersionedStore``."""
+        timestamps share one merged view, as in ``VersionedStore``.
+
+        Under a parallel placement the per-shard scans collapse into ONE
+        device-parallel stacked launch (``_get_versions_parallel``) —
+        byte-identical results, the serial loop below is the fallback."""
         fields = list(fields) if fields is not None else list(self.schema)
         ts_list = [int(t) for t in ts_list]
         if not ts_list:
             return []
         uniq = list(dict.fromkeys(ts_list))
+        if self._use_parallel(len(uniq)):
+            by_t = dict(zip(uniq, self._get_versions_parallel(
+                uniq, fields, key_filter, include_deleted)))
+            return [by_t[t] for t in ts_list]
         per_shard = [self.shard(s).get_versions(
             uniq, fields=fields, key_filter=key_filter,
-            include_deleted=include_deleted) for s in range(self.n_shards)]
+            include_deleted=include_deleted)
+            for s in range(self.n_shards)]
         by_t: dict[int, VersionView] = {}
         for qi, t in enumerate(uniq):
             views = [per_shard[s][qi] for s in range(self.n_shards)]
@@ -444,6 +522,65 @@ class ShardedStore:
         return self.get_versions([t], fields=fields, key_filter=key_filter,
                                  include_deleted=include_deleted)[0]
 
+    def _get_versions_parallel(self, uniq, fields, key_filter,
+                               include_deleted) -> list[VersionView]:
+        """MERGED views for the unique timestamps, one per ``uniq`` entry,
+        from ONE stacked launch: the cross-shard ``PlacedSuperLog`` answers
+        every shard's boundary cumsums together (one shard per device under
+        a mesh placement), exists resolution is one fused EXISTS gather,
+        and each field's values come from one fused cross-shard ``take``
+        with the gather indices already permuted into the final merged row
+        order — no per-shard intermediate views, no re-concatenation. The
+        math per element is exactly ``VersionedStore.get_versions`` + the
+        facade merge — byte-identical to the serial loop."""
+        placed, sls = self._placed_superlog()
+        nq, ns = len(uniq), self.n_shards
+        bcums = placed.boundary_cums(uniq)
+        ex = placed.exists_matrices(bcums, sls)
+        # per-shard flat selections over ALL queries (row-major (qi, row)
+        # nonzero order == the per-query loop order the serial path uses)
+        sel_cat, qi_cat = [], []
+        for s in range(ns):
+            mat = ex[s][1] if include_deleted else ex[s][0]
+            if key_filter is None:
+                qis, rr = np.nonzero(mat)
+            else:
+                parts = [self._shards[s]._filter_sel(
+                    np.nonzero(mat[qi])[0], key_filter) for qi in range(nq)]
+                rr = (np.concatenate(parts) if parts
+                      else np.zeros(0, np.int64))
+                qis = np.repeat(np.arange(nq), [len(p) for p in parts])
+            sel_cat.append(rr)
+            qi_cat.append(qis)
+        # global merge of the whole wave in one stable sort: shards
+        # partition the row space, so within a query (qi, global_row) keys
+        # are unique and lexsort reproduces merge_shard_rows exactly
+        big_qi = np.concatenate(qi_cat)
+        big_g = np.concatenate(
+            [self._shard_rows(s)[sel_cat[s]] for s in range(ns)])
+        perm = np.lexsort((big_g, big_qi))
+        rows_all = big_g[perm]
+        lens_q = np.bincount(big_qi, minlength=nq)
+        rows_q = np.split(rows_all, np.cumsum(lens_q)[:-1])
+        values_q: list[dict] = [{} for _ in range(nq)]
+        for name in fields:
+            offs = placed.field_offsets(name, sls)
+            iparts, kparts = [], []
+            for s in range(ns):
+                f = sls[s].fields[name]
+                c = sls[s].counts(name, bcums[s])[qi_cat[s], sel_cat[s]]
+                iparts.append(offs[s] + np.clip(
+                    f.ptr[sel_cat[s]] + c - 1, 0, max(f.n_cells - 1, 0)))
+                kparts.append(c > 0)
+            for qi, v in enumerate(placed.take_cells(
+                    name, np.concatenate(iparts)[perm],
+                    np.concatenate(kparts)[perm], lens_q, sls)):
+                values_q[qi][name] = v
+        return [VersionView(ts=t, keys=[self.row_keys[r] for r in rows_q[qi]],
+                            row_idx=rows_q[qi].astype(np.int32),
+                            values=values_q[qi])
+                for qi, t in enumerate(uniq)]
+
     def get_increments(self, pairs: Sequence[tuple[Timestamp, Timestamp]], *,
                        significant_fields: Sequence[str] | None = None,
                        fields: Sequence[str] | None = None) -> list[Increment]:
@@ -455,6 +592,10 @@ class ShardedStore:
         if not pairs:
             return []
         upairs = list(dict.fromkeys(pairs))
+        if self._use_parallel(len(upairs)):
+            by_p = dict(zip(upairs, self._get_increments_parallel(
+                upairs, sig, out_fields)))
+            return [by_p[p] for p in pairs]
         per_shard = [self.shard(s).get_increments(
             upairs, significant_fields=sig, fields=out_fields)
             for s in range(self.n_shards)]
@@ -479,6 +620,77 @@ class ShardedStore:
         return self.get_increments(
             [(t0, t1)], significant_fields=significant_fields,
             fields=fields)[0]
+
+    def _get_increments_parallel(self, upairs, sig,
+                                 out_fields) -> list[Increment]:
+        """MERGED increments for the unique windows from ONE stacked launch
+        over the unique endpoints — the device-parallel twin of the serial
+        per-shard ``get_increments`` loop + facade merge (same math, same
+        bytes). Change detection stays on host (tiny count diffs); value
+        materialization is one fused cross-shard ``take`` per field with
+        deleted-row zeroing folded into the gather mask."""
+        uniq = list(dict.fromkeys(t for p in upairs for t in p))
+        q_of = {t: i for i, t in enumerate(uniq)}
+        placed, sls = self._placed_superlog()
+        np_ct, ns = len(upairs), self.n_shards
+        bcums = placed.boundary_cums(uniq)
+        ex = placed.exists_matrices(bcums, sls)
+        names = list(dict.fromkeys(sig + out_fields))
+        cnt = [{name: sls[s].counts(name, bcums[s]) for name in names}
+               for s in range(ns)]
+        i0_arr = np.asarray([q_of[t0] for t0, _ in upairs], np.intp)
+        i1_arr = np.asarray([q_of[t1] for _, t1 in upairs], np.intp)
+        # per-shard flat (pair, row) selections + kinds, all pairs at once
+        # ((pi, row) nonzero order == the serial per-pair loop order)
+        sel_cat, pi_cat, kind_cat = [], [], []
+        for s in range(ns):
+            exists = ex[s][0]
+            changed = np.zeros((np_ct, self._shards[s].n_rows), bool)
+            for name in sig:
+                changed |= (cnt[s][name][i1_arr] - cnt[s][name][i0_arr]) > 0
+            e0, e1 = exists[i0_arr], exists[i1_arr]
+            new = e1 & ~e0
+            deleted = e0 & ~e1
+            updated = e1 & e0 & changed
+            pis, rr = np.nonzero(new | deleted | updated)
+            kind = np.zeros(len(rr), np.int8)  # zeros == KIND_NEW
+            kind[updated[pis, rr]] = KIND_UPDATED
+            kind[deleted[pis, rr]] = KIND_DELETED
+            sel_cat.append(rr)
+            pi_cat.append(pis)
+            kind_cat.append(kind)
+        # one stable sort merges every pair's rows (see _get_versions_parallel)
+        big_pi = np.concatenate(pi_cat)
+        big_g = np.concatenate(
+            [self._shard_rows(s)[sel_cat[s]] for s in range(ns)])
+        perm = np.lexsort((big_g, big_pi))
+        rows_all = big_g[perm]
+        kind_all = np.concatenate(kind_cat)[perm]
+        lens_q = np.bincount(big_pi, minlength=np_ct)
+        cuts = np.cumsum(lens_q)[:-1]
+        rows_q = np.split(rows_all, cuts)
+        kind_q = np.split(kind_all, cuts)
+        not_deleted = kind_all != KIND_DELETED
+        values_q: list[dict] = [{} for _ in upairs]
+        for name in out_fields:
+            offs = placed.field_offsets(name, sls)
+            iparts, kparts = [], []
+            for s in range(ns):
+                f = sls[s].fields[name]
+                c = cnt[s][name][i1_arr[pi_cat[s]], sel_cat[s]]
+                iparts.append(offs[s] + np.clip(
+                    f.ptr[sel_cat[s]] + c - 1, 0, max(f.n_cells - 1, 0)))
+                kparts.append(c > 0)
+            for qi, v in enumerate(placed.take_cells(
+                    name, np.concatenate(iparts)[perm],
+                    np.concatenate(kparts)[perm] & not_deleted,
+                    lens_q, sls)):
+                values_q[qi][name] = v
+        return [Increment(t0=t0, t1=t1,
+                          keys=[self.row_keys[r] for r in rows_q[qi]],
+                          row_idx=rows_q[qi].astype(np.int32),
+                          kind=kind_q[qi], values=values_q[qi])
+                for qi, (t0, t1) in enumerate(upairs)]
 
     # -- compaction -----------------------------------------------------------
     def compact(self, before_ts: Timestamp, *, label: str = "",

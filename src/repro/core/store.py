@@ -45,6 +45,7 @@ import re
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
@@ -334,13 +335,19 @@ class _SuperLogField:
     dtype: np.dtype
     ptr: np.ndarray             # (N+1,) log-local CSR offsets (host)
     vals_host: np.ndarray | None  # (C_f, W) consolidated cell values
+    device: object = None       # upload target (None = default device)
     _vals_dev: object = None
 
     def vals_dev(self):
         """Device copy of the cell values, uploaded on first gather — a
-        narrow-field query must not pay for the store's wide columns."""
+        narrow-field query must not pay for the store's wide columns.
+        With a pinned ``device`` (shard->device placement) the upload
+        lands there, so per-shard gathers run one shard per device."""
         if self._vals_dev is None and self.vals_host is not None:
-            self._vals_dev = jnp.asarray(self.vals_host)
+            self._vals_dev = (jnp.asarray(self.vals_host)
+                              if self.device is None
+                              else jax.device_put(self.vals_host,
+                                                  self.device))
         return self._vals_dev
 
 
@@ -363,6 +370,7 @@ class _SuperLog:
     def __init__(self, store: "VersionedStore"):
         self.n_rows = store.n_rows
         self.epoch = store.log_epoch
+        self.device = store.device
         logs: dict[str, _CellLog] = {n: c.log for n, c in store.fields.items()}
         logs[self.EXISTS] = store.exists_log
         ts_parts: list[np.ndarray] = []
@@ -375,16 +383,30 @@ class _SuperLog:
             self.fields[name] = _SuperLogField(
                 offset=off, b_off=b_off, n_cells=len(tss), width=log.width,
                 dtype=log.dtype, ptr=ptr,
-                vals_host=vals if len(tss) else None)
+                vals_host=vals if len(tss) else None, device=self.device)
             ts_parts.append(tss.astype(np.int32))
             bnd_parts.append(off + ptr.astype(np.int64))
             off += len(tss)
             b_off += len(ptr)
         self.n_cells = off
-        self.ts = jnp.asarray(np.concatenate(ts_parts)) if off else None
+        # fused ts stays host-side until the first scan needs it: the
+        # sharded facade's device-parallel path scans a cross-shard stacked
+        # copy instead (core/placement.py) and must not pay a second upload
+        self.ts_host = np.concatenate(ts_parts) if off else None
+        self._ts_dev = None
         # every field's CSR boundaries in fused-cell coordinates: the scan
         # result is only ever read at these positions
         self.boundaries = np.concatenate(bnd_parts)
+
+    @property
+    def ts(self):
+        """Device copy of the fused ts array, uploaded on first use (to
+        the pinned ``device`` when shard placement set one)."""
+        if self._ts_dev is None and self.ts_host is not None:
+            self._ts_dev = (jnp.asarray(self.ts_host)
+                            if self.device is None
+                            else jax.device_put(self.ts_host, self.device))
+        return self._ts_dev
 
     # -- the one batched scan -------------------------------------------------
     def boundary_cums(self, ts_list: Sequence[Timestamp]) -> np.ndarray:
@@ -420,23 +442,42 @@ class _SuperLog:
         v = np.asarray(jnp.take(f.vals_dev()[:, 0], jnp.asarray(idx), axis=0))
         return (v > 0) & ever, ever
 
+    def gather_dispatch(self, name: str, cnts: "Sequence[np.ndarray]",
+                        sels: Sequence[np.ndarray]) -> tuple:
+        """Launch the fused per-field gather WITHOUT forcing a host sync:
+        returns an opaque handle for ``gather_finalize``. The sharded
+        facade dispatches every shard's gathers (each on its own device
+        under placement) before collecting any, so they overlap."""
+        f = self.fields[name]
+        lens = [len(s) for s in sels]
+        if f.vals_host is None or sum(lens) == 0:
+            return (None, lens, None)
+        cat_cnt = np.concatenate([c[s] for c, s in zip(cnts, sels)])
+        cat_rows = np.concatenate(sels)
+        idx = np.clip(f.ptr[cat_rows] + cat_cnt - 1, 0, f.n_cells - 1)
+        dev = jnp.take(f.vals_dev(), jnp.asarray(idx), axis=0)
+        return (dev, lens, cat_cnt)
+
+    def gather_finalize(self, name: str, handle: tuple) -> list[np.ndarray]:
+        """Collect a ``gather_dispatch`` result to host, split per query.
+        Rows with no cell at the query time come back zeroed (same
+        semantics as _CellLog.select_at)."""
+        dev, lens, cat_cnt = handle
+        f = self.fields[name]
+        if dev is None:
+            return [np.zeros((l, f.width), f.dtype) for l in lens]
+        out = np.array(dev)
+        out[cat_cnt <= 0] = 0
+        offs = np.cumsum([0] + lens)
+        return [out[offs[i]: offs[i + 1]] for i in range(len(lens))]
+
     def gather_many(self, name: str, cnts: "Sequence[np.ndarray]",
                     sels: Sequence[np.ndarray]) -> list[np.ndarray]:
         """Per-query row selections fused into ONE device gather per field:
         cnts[q] the (N,) per-row counts and sels[q] the selected rows of
-        query q. Rows with no cell at the query time come back zeroed (same
-        semantics as _CellLog.select_at)."""
-        f = self.fields[name]
-        lens = [len(s) for s in sels]
-        if f.vals_host is None or sum(lens) == 0:
-            return [np.zeros((l, f.width), f.dtype) for l in lens]
-        cat_cnt = np.concatenate([c[s] for c, s in zip(cnts, sels)])
-        cat_rows = np.concatenate(sels)
-        idx = np.clip(f.ptr[cat_rows] + cat_cnt - 1, 0, f.n_cells - 1)
-        out = np.array(jnp.take(f.vals_dev(), jnp.asarray(idx), axis=0))
-        out[cat_cnt <= 0] = 0
-        offs = np.cumsum([0] + lens)
-        return [out[offs[i]: offs[i + 1]] for i in range(len(lens))]
+        query q (dispatch + finalize in one step)."""
+        return self.gather_finalize(name, self.gather_dispatch(name, cnts,
+                                                               sels))
 
 
 class _FieldColumn:
@@ -494,6 +535,12 @@ class VersionedStore:
         self._history_digest = ""
         self._log_epoch = 0
         self._superlog: _SuperLog | None = None
+        # shard->device placement pin (core/placement.py): when set, the
+        # fused superlog's device buffers upload to THIS device so
+        # per-shard scans and gathers spread across the mesh. None (the
+        # default, and every unsharded store) = jax default device.
+        # Purely a placement hint — query bytes are identical either way.
+        self.device = None
         for fs in schema:
             self.add_field(fs)
 
@@ -570,8 +617,8 @@ class VersionedStore:
         device = 0
         sl = self._superlog
         if sl is not None:
-            if sl.ts is not None:
-                device += sl.ts.nbytes
+            if sl._ts_dev is not None:  # lazy: reading .ts would upload
+                device += sl._ts_dev.nbytes
             for f in sl.fields.values():
                 if f._vals_dev is not None:
                     device += f._vals_dev.nbytes

@@ -80,6 +80,113 @@ def batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array, *,
     return out[:, :c]
 
 
+def _stacked_masked_cumsum_kernel(ts_ref, tq_ref, cum_ref, tot_ref):
+    t = tq_ref[0]
+    m = (ts_ref[0, :] <= t).astype(jnp.int32)
+    c = jnp.cumsum(m)
+    cum_ref[0, 0, :] = c
+    tot_ref[0, 0, 0] = c[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stacked_masked_cumsum(ts_stack: jax.Array, t_queries: jax.Array, *,
+                          interpret: bool | None = None) -> jax.Array:
+    """ts_stack: (S, C); t_queries: (Q,) -> (S, Q, C) int32 inclusive
+    cumsum of (ts <= t_q) per (shard, query) — the batched kernel with one
+    extra grid axis over shards, so S independent fused superlogs scan in
+    ONE launch. Pad rows (and ragged tails) with a value above every
+    query (int32 max > TS_MAX); padded cells never count."""
+    t_queries = jnp.asarray(t_queries, dtype=ts_stack.dtype)
+    if interpret is None:
+        if interpret_default():
+            return ref.ref_stacked_masked_cumsum(ts_stack, t_queries)
+        interpret = False
+    s, c = ts_stack.shape
+    (q,) = t_queries.shape
+    if s == 0 or c == 0 or q == 0:
+        return jnp.zeros((s, q, c), jnp.int32)
+    c_pad = cdiv(c, TILE_C) * TILE_C
+    if c_pad != c:
+        pad = jnp.full((s, c_pad - c), jnp.iinfo(ts_stack.dtype).max,
+                       ts_stack.dtype)
+        ts_stack = jnp.concatenate([ts_stack, pad], axis=1)
+    n_tiles = c_pad // TILE_C
+    intra, totals = pl.pallas_call(
+        _stacked_masked_cumsum_kernel,
+        grid=(s, n_tiles, q),
+        in_specs=[
+            pl.BlockSpec((1, TILE_C), lambda k, i, j: (k, i)),
+            pl.BlockSpec((1,), lambda k, i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, TILE_C), lambda k, i, j: (k, j, i)),
+            pl.BlockSpec((1, 1, 1), lambda k, i, j: (k, j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, q, c_pad), jnp.int32),
+            jax.ShapeDtypeStruct((s, q, n_tiles), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ts_stack, t_queries)
+    offsets = jnp.concatenate(
+        [jnp.zeros((s, q, 1), jnp.int32),
+         jnp.cumsum(totals, axis=2)[:, :, :-1]], axis=2)
+    out = intra + jnp.repeat(offsets, TILE_C, axis=2,
+                             total_repeat_length=c_pad)
+    return out[:, :, :c]
+
+
+def _boundary_take(cum: jax.Array, boundaries: jax.Array) -> jax.Array:
+    """Sample an (S, Q, C) stacked cumsum at per-shard CSR boundaries
+    (S, B) -> (S, Q, B): entry 0 prepended so boundary 0 reads count 0."""
+    s, q, _ = cum.shape
+    cum0 = jnp.concatenate([jnp.zeros((s, q, 1), jnp.int32), cum], axis=2)
+    idx = jnp.broadcast_to(boundaries[:, None, :].astype(jnp.int32),
+                           (s, q, boundaries.shape[1]))
+    return jnp.take_along_axis(cum0, idx, axis=2)
+
+
+def stacked_boundary_select(ts_stack, t_queries, boundaries, *, mesh=None,
+                            interpret: bool | None = None):
+    """Device-parallel batched-select over S stacked fused superlogs.
+
+    ts_stack: (S, Cmax) int32 fused per-shard ts rows padded with int32
+    max; t_queries: (Q,) clamped query timestamps; boundaries: (S, Bmax)
+    int32 per-shard CSR boundary positions (zero-padded). Returns the
+    (S, Q, Bmax) boundary cumsums — the per-shard _SuperLog.boundary_cums
+    numbers for every shard from ONE launch.
+
+    With ``mesh`` (a 1-D ("shard",) mesh of exactly S devices) the scan
+    runs under shard_map, one shard per device, and the caller should have
+    device_put the stacked operands with NamedSharding(mesh, P("shard",
+    None)) so no resharding happens on the hot path. Without a mesh the
+    same stacked computation runs on whatever device holds the operands —
+    still one launch instead of S, byte-identical either way.
+    """
+    if mesh is None:
+        cum = stacked_masked_cumsum(ts_stack, t_queries, interpret=interpret)
+        return _boundary_take(cum, jnp.asarray(boundaries))
+    return _mesh_boundary_select(mesh, interpret)(
+        ts_stack, t_queries, boundaries)
+
+
+@functools.lru_cache(maxsize=8)
+def _mesh_boundary_select(mesh, interpret: bool | None):
+    """Compiled shard_map'd boundary select for one mesh, cached so the
+    serving hot path never retraces (jit keyed per operand shape)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(ts, qs, bnd):
+        cum = stacked_masked_cumsum(ts, qs, interpret=interpret)
+        return _boundary_take(cum, bnd)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P("shard", None), P(), P("shard", None)),
+        out_specs=P("shard", None, None)))
+
+
 def batched_version_select(log_vals, log_ts, row_ptr, t_queries, *,
                            interpret: bool | None = None):
     """Segmented last-cell-with-ts<=T selection for Q query timestamps.

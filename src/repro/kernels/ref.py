@@ -57,6 +57,31 @@ def ref_batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array) -> jax.Array:
     return jnp.cumsum(m.astype(jnp.int32), axis=1, dtype=jnp.int32)
 
 
+def ref_stacked_masked_cumsum(ts_stack: jax.Array,
+                              t_queries: jax.Array) -> jax.Array:
+    """ts_stack: (S, C) one padded fused-ts row per shard; t_queries: (Q,)
+    -> (S, Q, C) int32 inclusive cumsum of (ts <= t_q) per (shard, query).
+    Padding cells must hold a value strictly above every possible query
+    (int32 max > TS_MAX) so they never count."""
+    m = (ts_stack[:, None, :]
+         <= jnp.asarray(t_queries, ts_stack.dtype)[None, :, None])
+    return jnp.cumsum(m.astype(jnp.int32), axis=2, dtype=jnp.int32)
+
+
+def ref_stacked_boundary_select(ts_stack, t_queries, boundaries):
+    """Boundary-sampled form of ref_stacked_masked_cumsum: entry
+    (s, q, b) is the count of cells with ts <= t_q among the first
+    ``boundaries[s, b]`` cells of shard s — exactly the per-shard
+    _SuperLog.boundary_cums numbers, computed for every shard in one
+    expression. boundaries: (S, B) int32 CSR positions in [0, C]."""
+    cum = ref_stacked_masked_cumsum(ts_stack, t_queries)
+    s, q, _ = cum.shape
+    cum0 = jnp.concatenate([jnp.zeros((s, q, 1), jnp.int32), cum], axis=2)
+    idx = jnp.broadcast_to(boundaries[:, None, :].astype(jnp.int32),
+                           (s, q, boundaries.shape[1]))
+    return jnp.take_along_axis(cum0, idx, axis=2)
+
+
 def ref_batched_version_select(log_vals, log_ts, row_ptr, t_queries):
     """Q-query generalization of ref_version_select: returns
     (out (Q, N, W), found (Q, N))."""

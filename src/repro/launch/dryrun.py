@@ -32,9 +32,8 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import default_hyper, make_prefill_step, \
     make_serve_step, make_train_step
 from repro.models import abstract_decode_state, batch_specs, build
-from repro.models.layers import ParamSpec
 from repro.sharding import (abstract_tree, shard_batch_specs,
-                            shard_decode_state, tree_shardings)
+                            shard_decode_state)
 from repro.train.optimizer import state_specs
 
 RESULTS_DIR = "experiments/dryrun"

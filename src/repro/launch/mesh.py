@@ -20,6 +20,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_shard_mesh(n_shards: int, devices=None):
+    """1-D ("shard",) mesh over the first ``n_shards`` devices — the
+    layout core/placement.py pins sharded-store superlogs across so the
+    scatter-gather batched select runs one shard per device. Returns None
+    when fewer than ``n_shards`` devices exist (the placement layer then
+    falls back to serial or single-device stacked execution)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_shards < 1 or len(devs) < n_shards:
+        return None
+    return jax.make_mesh((n_shards,), ("shard",), devices=devs[:n_shards])
+
+
 def make_test_mesh(devices: int | None = None):
     """Small mesh for CPU distributed tests (8 host devices -> (2, 4))."""
     n = devices or len(jax.devices())

@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .layers import ParamSpec, apply_norm
+from .layers import ParamSpec
 
 CHUNK = 32
 LORA = 32

@@ -12,7 +12,6 @@ prefill (build caches + last-token logits), decode_step (one token).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -22,7 +21,7 @@ from . import attention as attn
 from . import moe as moe_mod
 from . import rwkv as rwkv_mod
 from . import ssm as ssm_mod
-from .layers import (ParamSpec, apply_embed, apply_head, apply_mlp, apply_norm,
+from .layers import (apply_embed, apply_head, apply_mlp, apply_norm,
                      embed_spec, init_params, mlp_spec, norm_spec, stack_specs)
 
 

@@ -8,12 +8,11 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
 from . import attention as attn
-from .layers import (ParamSpec, apply_embed, apply_head, apply_mlp, apply_norm,
+from .layers import (apply_embed, apply_head, apply_mlp, apply_norm,
                      embed_spec, mlp_spec, norm_spec, stack_specs)
 
 

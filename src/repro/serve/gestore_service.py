@@ -84,7 +84,8 @@ class TieredStorePool:
     """
 
     def __init__(self, stores, *, budget_bytes: int | None = None,
-                 spill_root: str | None = None):
+                 spill_root: str | None = None,
+                 shard_placement=None):
         """Args:
           stores: a GeStore facade or {name: VersionedStore} mapping. A
             dict (or a facade's dict) is shared live; other mappings are
@@ -94,6 +95,12 @@ class TieredStorePool:
           spill_root: directory for host->disk spills; None limits
             eviction to the device->host tier unless a GeStore facade
             supplies its own store paths.
+          shard_placement: shard->device execution policy pinned onto
+            every sharded store the pool serves (admitted now, ``add``-ed
+            later, or reloaded after a spill — reloads must not silently
+            re-plan). A ``core.placement.ShardPlacement``, or a force
+            string ("parallel"/"serial") planned per store's shard count;
+            None leaves stores to auto-plan (see ``plan_placement``).
         """
         self._facade = stores if hasattr(stores, "store_path") else None
         backing = getattr(stores, "stores", stores)
@@ -101,6 +108,9 @@ class TieredStorePool:
             backing if isinstance(backing, dict) else dict(backing))
         self.budget_bytes = budget_bytes
         self.spill_root = spill_root
+        self.shard_placement = shard_placement
+        for st in self._stores.values():
+            self._apply_placement(st)
         self._spilled: dict[str, str] = {}        # name -> save path
         self._epoch_floor: dict[str, int] = {}
         self._lru: OrderedDict[str, None] = OrderedDict(
@@ -123,6 +133,17 @@ class TieredStorePool:
             st._log_epoch = floor
         return st
 
+    def _apply_placement(self, st) -> None:
+        """Pin the pool's shard->device policy onto a sharded store (plain
+        stores have no placement and pass through untouched)."""
+        sp = self.shard_placement
+        if sp is None or not hasattr(st, "placement"):
+            return
+        if isinstance(sp, str):
+            from repro.core.placement import plan_placement
+            sp = plan_placement(st.n_shards, force=sp)
+        st.placement = sp
+
     # -- mapping interface ----------------------------------------------------
     def __getitem__(self, name: str) -> VersionedStore:
         st = self._stores.get(name)
@@ -137,6 +158,7 @@ class TieredStorePool:
             # trip through spills too.
             from repro.core.shard import open_any_store
             st = self._apply_floor(name, open_any_store(path, lazy=True))
+            self._apply_placement(st)
             del self._spilled[name]
             self._stores[name] = st
             self.stats["reloads"] += 1
@@ -171,6 +193,7 @@ class TieredStorePool:
             self._epoch_floor[name] = max(self._epoch_floor.get(name, 0),
                                           old.log_epoch + 1)
         self._stores[name] = self._apply_floor(name, store)
+        self._apply_placement(store)
         self._spilled.pop(name, None)
         self._lru[name] = None
 
@@ -267,7 +290,8 @@ class GeStoreService:
     def __init__(self, stores, *, max_batch: int = 64,
                  plan_cache_size: int = 16, max_views_per_plan: int = 256,
                  memory_budget_bytes: int | None = None,
-                 spill_root: str | None = None):
+                 spill_root: str | None = None,
+                 shard_placement=None):
         """Args:
           stores: a GeStore facade, {name: VersionedStore} mapping, or an
             existing TieredStorePool.
@@ -276,16 +300,22 @@ class GeStoreService:
           max_views_per_plan: LRU capacity of views within one plan.
           memory_budget_bytes / spill_root: tiered-memory knobs (see
             TieredStorePool); both None = no eviction (seed behavior).
+          shard_placement: shard->device policy for sharded stores (see
+            TieredStorePool; a ShardPlacement or "parallel"/"serial").
+            Builds a pool even without a memory budget so the policy
+            sticks across adds and spill reloads.
         """
         backing = getattr(stores, "stores", stores)
         if isinstance(backing, TieredStorePool):
             self.pool: TieredStorePool | None = backing
-        elif memory_budget_bytes is not None or spill_root is not None:
+        elif (memory_budget_bytes is not None or spill_root is not None
+              or shard_placement is not None):
             # pass the original object: a GeStore facade carries the spill
             # paths its own flush()/open_store() use
             self.pool = TieredStorePool(stores,
                                         budget_bytes=memory_budget_bytes,
-                                        spill_root=spill_root)
+                                        spill_root=spill_root,
+                                        shard_placement=shard_placement)
         else:
             self.pool = None
         # explicit None check: the pool defines __len__, so an empty pool is

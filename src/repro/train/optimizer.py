@@ -9,7 +9,6 @@ makes kimi-k2 trainable on v5e-class HBM (see DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

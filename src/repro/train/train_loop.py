@@ -4,9 +4,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

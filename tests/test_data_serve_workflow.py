@@ -2,10 +2,9 @@
 scheduler, and the mini-GePan workflow (full vs incremental parity)."""
 import numpy as np
 import jax
-import pytest
 
 import repro.core as core
-from repro.configs.base import RunConfig, get_smoke_config
+from repro.configs.base import get_smoke_config
 from repro.core.parsers import FastaParser
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.data.tokenizer import ByteTokenizer

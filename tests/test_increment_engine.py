@@ -1,7 +1,6 @@
 """GeStore facade: generate/merge around unmodified tools, cache behaviour,
 and the BLAST e-value merger correction (paper §III.A, §IV.B)."""
 import math
-import tempfile
 
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Neural-BLAST: incremental update + merge must EXACTLY equal full
 recompute (top-k, scores, and the e-value normalizer Z)."""
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 import repro.core as core

@@ -4,7 +4,7 @@ unsharded store, per-shard persistence, and tiered-memory integration."""
 import numpy as np
 import pytest
 
-from _hyp import HAVE_HYPOTHESIS, given, settings, st as hst
+from _hyp import given, settings, st as hst
 
 from repro.core.shard import ShardedStore, open_any_store
 from repro.core.store import FieldSchema, VersionedStore
@@ -399,6 +399,125 @@ def test_corrupt_shard_fails_before_any_mutation(tmp_path):
         assert b._shards[s].last_ts < 99
 
 
+# -- device-parallel placement (core/placement.py) ----------------------------
+
+def test_plan_placement_modes():
+    """Auto plan: serial below 2 shards or with too few devices (the
+    graceful fallback); force='parallel' degrades to single-device
+    stacked execution instead of failing."""
+    from repro.core.placement import plan_placement
+    import jax
+    n_dev = len(jax.devices())          # 1 in the tier-1 process
+    assert plan_placement(1).mode == "serial"
+    assert plan_placement(5).mode == ("mesh" if n_dev >= 5 else "serial")
+    assert plan_placement(5, force="parallel").mode == (
+        "mesh" if n_dev >= 5 else "stacked")
+    assert plan_placement(5, force="serial").mode == "serial"
+    assert plan_placement(n_dev, force="parallel").mode == (
+        "mesh" if n_dev >= 2 else "serial")
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_parallel_path_byte_identical(n_shards):
+    """Forced-parallel (stacked on one device) facade queries are
+    byte-identical to the serial per-shard loop — the placement is pure
+    execution strategy. Covers include_deleted, field subsets, filters."""
+    from repro.core.placement import plan_placement
+    a, b, _, _ = mk_pair(n_shards)
+    a.placement = plan_placement(n_shards, force="serial")
+    b.placement = plan_placement(n_shards, force="parallel")
+    ts = [10, 20, 25, 30, 20]
+    for va, vb in zip(a.get_versions(ts), b.get_versions(ts)):
+        assert_view_equal(va, vb)
+    for va, vb in zip(a.get_versions(ts, include_deleted=True),
+                      b.get_versions(ts, include_deleted=True)):
+        assert_view_equal(va, vb)
+    for va, vb in zip(a.get_versions([20], fields=["seq"], key_filter=b"K00"),
+                      b.get_versions([20], fields=["seq"], key_filter=b"K00")):
+        assert_view_equal(va, vb)
+    pairs = [(10, 20), (20, 25), (10, 30), (25, 30), (10, 20)]
+    for xa, xb in zip(a.get_increments(pairs, significant_fields=["seq"]),
+                      b.get_increments(pairs, significant_fields=["seq"])):
+        assert_inc_equal(xa, xb)
+    for xa, xb in zip(a.get_increments(pairs[:1], fields=[]),
+                      b.get_increments(pairs[:1], fields=[])):
+        assert_inc_equal(xa, xb)
+
+
+def test_parallel_path_survives_spill_midsequence(tmp_path):
+    """Shard eviction between parallel queries: the stacked cache is keyed
+    on the per-shard epoch tuple, which spill freezes and reload floors —
+    results must stay byte-identical to serial with no restack skew."""
+    from repro.core.placement import plan_placement
+    a, b, _, _ = mk_pair(3)
+    b.placement = plan_placement(3, force="parallel")
+    b.save(str(tmp_path / "up"))
+    for va, vb in zip(a.get_versions([10, 20]), b.get_versions([10, 20])):
+        assert_view_equal(va, vb)
+    assert b.spill_shard() is not None            # evict mid-sequence
+    for va, vb in zip(a.get_versions([20, 30]), b.get_versions([20, 30])):
+        assert_view_equal(va, vb)
+    assert_inc_equal(a.get_increment(10, 30), b.get_increment(10, 30))
+
+
+def test_parallel_placed_cache_in_tiered_accounting(tmp_path):
+    """The stacked cross-shard superlog counts as device state: nbytes
+    reports it and drop_superlog releases it (the pool's device->host
+    demotion tier must actually reclaim the memory)."""
+    from repro.core.placement import plan_placement
+    _, b, _, _ = mk_pair(2)
+    b.placement = plan_placement(2, force="parallel")
+    b.get_versions([10, 20])
+    assert b._placed is not None
+    assert b.has_device_state()
+    assert b.nbytes()["device"] > 0
+    b.drop_superlog()
+    assert b._placed is None and not b.has_device_state()
+    # epoch tuple unchanged after a plain rebuild => cache reused
+    b.get_versions([10, 20])
+    placed = b._placed
+    b.get_versions([25, 30])
+    assert b._placed is placed
+    # a mutation moves a shard epoch => restack (multi-ts query: a single
+    # cold timestamp takes the lazy per-field path, by design)
+    b.update(99, ["K0000"], {"seq": np.ones((1, 6), np.int32),
+                             "len": np.ones((1, 1), np.int32),
+                             "ann": np.ones((1, 2), np.int32)},
+             full_release=False)
+    b.get_versions([99, 10])
+    assert b._placed is not placed
+
+
+def test_pool_pins_placement_across_spill_reload(tmp_path):
+    """TieredStorePool(shard_placement=...) applies the policy to admitted
+    stores AND to spill reloads — a reload must not silently re-plan."""
+    from repro.serve import TieredStorePool
+    a, b, _, _ = mk_pair(2)
+    want = a.get_version(30)
+    pool = TieredStorePool({"up": b}, budget_bytes=1,
+                           spill_root=str(tmp_path),
+                           shard_placement="parallel")
+    assert b.placement.parallel
+    assert pool.enforce() >= 2                    # fully spill the facade
+    re = pool["up"]
+    assert isinstance(re, ShardedStore) and re.placement.parallel
+    assert_view_equal(want, re.get_version(30))
+
+
+def test_service_routes_through_parallel_placement():
+    """GeStoreService(shard_placement='parallel') serves byte-identical
+    views through the stacked path (no memory budget needed)."""
+    from repro.serve import GeStoreService
+    from repro.serve.gestore_service import VersionRequest
+    a, b, _, _ = mk_pair(2)
+    svc = GeStoreService({"up": b}, shard_placement="parallel")
+    assert b.placement.parallel
+    got = svc.materialize([VersionRequest("up", 20, None),
+                           VersionRequest("up", 30, None)])
+    for w, g in zip(a.get_versions([20, 30]), got):
+        assert_view_equal(w, g)
+
+
 # -- GeStore wiring -----------------------------------------------------------
 
 def test_gestore_creates_flushes_and_reopens_sharded(tmp_path):
@@ -448,6 +567,93 @@ def test_gestore_cache_budget_wired(tmp_path):
     reg.register_parser(FastaParser(seq_width=8, desc_width=2))
     gs = core.GeStore(str(tmp_path / "gs"), reg, cache_max_bytes=123)
     assert gs.cache.max_bytes == 123
+
+
+# -- device matrix: serial == parallel across real device counts --------------
+# Subprocess isolation: the device count is locked at first jax init, and
+# the main pytest process must keep seeing exactly one CPU device.
+
+def _run_with_devices(body, n):
+    import subprocess, sys, textwrap
+    src = __import__("os").path.abspath(
+        __import__("os").path.join(__import__("os").path.dirname(__file__),
+                                   "..", "src"))
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={n}'\n"
+            + textwrap.dedent(body))
+    import os
+    env = dict(os.environ, PYTHONPATH=src)
+    env.pop("GESTORE_PARALLEL", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+_DEVICE_MATRIX_BODY = """
+    import numpy as np, jax, tempfile
+    from repro.core.shard import ShardedStore
+    from repro.core.store import FieldSchema, VersionedStore
+    from repro.core.placement import plan_placement
+
+    SCHEMA = [FieldSchema("seq", 6, "int32"), FieldSchema("len", 1, "int32")]
+
+    def history(store, rng):
+        keys = [f"K{i:04d}" for i in range(40)]
+        store.update(10, keys, {"seq": rng.integers(0, 9, (40, 6)).astype(np.int32),
+                                "len": rng.integers(1, 9, (40, 1)).astype(np.int32)})
+        keys2 = keys[:30] + ["N0", "N1"]
+        store.update(20, keys2, {"seq": rng.integers(0, 9, (32, 6)).astype(np.int32),
+                                 "len": rng.integers(1, 9, (32, 1)).astype(np.int32)})
+        store.delete(25, ["K0003", "N1"])
+        return store
+
+    def check(a, b):
+        ts = [10, 20, 25, 20]
+        for va, vb in zip(a.get_versions(ts), b.get_versions(ts)):
+            assert va.keys == vb.keys
+            assert np.array_equal(va.row_idx, vb.row_idx)
+            for f in va.values:
+                assert va.values[f].tobytes() == vb.values[f].tobytes(), f
+        for xa, xb in zip(a.get_increments([(10, 20), (20, 25), (10, 25)]),
+                          b.get_increments([(10, 20), (20, 25), (10, 25)])):
+            assert xa.keys == xb.keys
+            assert np.array_equal(xa.kind, xb.kind)
+            for f in xa.values:
+                assert xa.values[f].tobytes() == xb.values[f].tobytes(), f
+
+    n_dev = len(jax.devices())
+    for n_shards in (1, 2, 5):
+        a = history(ShardedStore("up", SCHEMA, n_shards=n_shards),
+                    np.random.default_rng(7))
+        b = history(ShardedStore("up", SCHEMA, n_shards=n_shards),
+                    np.random.default_rng(7))
+        a.placement = plan_placement(n_shards, force="serial")
+        b.placement = plan_placement(n_shards, force="parallel")
+        want = ("mesh" if n_dev >= n_shards >= 2
+                else "stacked" if n_shards >= 2 else "serial")
+        assert b.placement.mode == want, (b.placement.mode, want)
+        check(a, b)
+        if n_shards >= 2:                    # spill mid-sequence, re-check
+            with tempfile.TemporaryDirectory() as d:
+                b.save(d + "/up")
+                assert b.spill_shard() is not None
+                check(a, b)
+        print(f"DEV{n_dev}_S{n_shards}_{b.placement.mode}_OK")
+"""
+
+
+@pytest.mark.parametrize("n_devices", (1, 2, 8))
+def test_device_matrix_serial_parallel_equivalence(n_devices):
+    """devices x shards equivalence matrix: with d devices forced via
+    XLA_FLAGS, every shard count in {1,2,5} returns byte-identical
+    results under serial and device-parallel placement (mesh when d >=
+    shards >= 2, stacked otherwise), including after spill_shard evicts
+    a shard between queries."""
+    out = _run_with_devices(_DEVICE_MATRIX_BODY, n_devices)
+    for n_shards in (1, 2, 5):
+        assert f"DEV{n_devices}_S{n_shards}_" in out
 
 
 # -- property test: random histories (runs when hypothesis is installed) ------

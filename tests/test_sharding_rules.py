@@ -1,9 +1,7 @@
 """Sharding-rule unit tests: fallback chains against the published dims
 (these run with a FAKE mesh shape object — no devices needed)."""
-import numpy as np
-import pytest
 
-from repro.sharding.rules import DEFAULT_RULES, pspec_for
+from repro.sharding.rules import pspec_for
 from jax.sharding import PartitionSpec as P
 
 

@@ -6,8 +6,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
-from repro.core.store import (FieldSchema, VersionedStore, KIND_DELETED,
-                              KIND_NEW, KIND_UPDATED)
+from repro.core.store import FieldSchema, VersionedStore, KIND_DELETED
 
 
 def mk_table(rng, n):

@@ -5,7 +5,6 @@ import tempfile
 
 import numpy as np
 import jax
-import pytest
 
 import repro.core as core
 from repro.configs.base import RunConfig, get_smoke_config

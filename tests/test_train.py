@@ -5,7 +5,6 @@ import tempfile
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import RunConfig, get_smoke_config
 from repro.data.pipeline import DataConfig, TokenPipeline

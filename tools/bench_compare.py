@@ -1,0 +1,157 @@
+"""Bench-regression gate: diff a fresh BENCH_results.json against the
+committed benchmarks/baseline.json.
+
+CI's bench-smoke job runs the benchmark harness at smoke sizes, then this
+tool compares every row's ``us_per_call`` to the committed baseline and
+fails the job when a metric regressed past its table's tolerance. The
+default tolerance is deliberately generous (shared runners are noisy and
+the baseline may have been recorded on different silicon): the gate exists
+to catch structural regressions — an accidental serial fallback, a
+recompile per call, an O(N) -> O(N^2) slip — not single-digit-percent
+drift. Tighten per table with ``--table-tolerance`` when a metric is known
+to be stable.
+
+Usage:
+  python tools/bench_compare.py                         # compare + report
+  python tools/bench_compare.py --tolerance 2.0         # global override
+  python tools/bench_compare.py --table-tolerance table7=3.0 ...
+  python tools/bench_compare.py --update                # rewrite baseline
+
+Rows present in the baseline but missing from a table the fresh run
+attempted count as regressions (a renamed/dropped metric must update the
+baseline explicitly); tables absent from the fresh run entirely are
+skipped, matching run.py's per-table merge semantics. A markdown delta
+table is always printed, and appended to $GITHUB_STEP_SUMMARY when set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(_ROOT, "BENCH_results.json")
+BASELINE = os.path.join(_ROOT, "benchmarks", "baseline.json")
+
+#: default allowed slowdown factor: fresh_us <= tol * baseline_us passes
+DEFAULT_TOLERANCE = 2.5
+
+
+def _table_of(name: str) -> str:
+    """'table7.get_versions_s2_q32' -> 'table7' (run.py's table key)."""
+    return name.split(".")[0]
+
+
+def _load(path: str) -> dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in data.get("results", [])
+            if "name" in r and "us_per_call" in r}
+
+
+def compare(base: dict[str, float], fresh: dict[str, float],
+            tolerance: float, table_tol: dict[str, float]):
+    """Returns (rows, regressions): rows are markdown cells for every
+    baseline metric of an attempted table; regressions the failing names."""
+    attempted = {_table_of(n) for n in fresh}
+    rows, regressions = [], []
+    for name in sorted(base):
+        table = _table_of(name)
+        if table not in attempted:
+            continue
+        tol = table_tol.get(table, tolerance)
+        b = base[name]
+        f = fresh.get(name)
+        if f is None:
+            rows.append((name, b, None, None, tol, "MISSING"))
+            regressions.append(name)
+            continue
+        ratio = f / b if b > 0 else float("inf")
+        ok = ratio <= tol
+        rows.append((name, b, f, ratio, tol, "ok" if ok else "REGRESSED"))
+        if not ok:
+            regressions.append(name)
+    for name in sorted(set(fresh) - set(base)):
+        rows.append((name, None, fresh[name], None, None, "new"))
+    return rows, regressions
+
+
+def render(rows) -> str:
+    out = ["| metric | baseline us | fresh us | ratio | tol | status |",
+           "|---|---|---|---|---|---|"]
+
+    def fmt(v, suf=""):
+        return "-" if v is None else f"{v:.1f}{suf}"
+
+    for name, b, f, ratio, tol, status in rows:
+        out.append(f"| {name} | {fmt(b)} | {fmt(f)} | "
+                   f"{fmt(ratio, 'x')} | {fmt(tol, 'x')} | {status} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default=RESULTS,
+                    help="fresh results json (default: BENCH_results.json)")
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="committed baseline json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_COMPARE_TOLERANCE",
+                                                 DEFAULT_TOLERANCE)),
+                    help="allowed slowdown factor (default %(default)s, "
+                    "env BENCH_COMPARE_TOLERANCE)")
+    ap.add_argument("--table-tolerance", action="append", default=[],
+                    metavar="TABLE=TOL",
+                    help="per-table override, e.g. table7=3.0 (repeatable)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh results "
+                    "(merging per table, like run.py) instead of comparing")
+    args = ap.parse_args(argv)
+
+    table_tol = {}
+    for spec in args.table_tolerance:
+        table, _, tol = spec.partition("=")
+        try:
+            table_tol[table] = float(tol)
+        except ValueError:
+            ap.error(f"bad --table-tolerance {spec!r} (want TABLE=FLOAT)")
+
+    fresh = _load(args.results)
+    if args.update:
+        old = _load(args.baseline) if os.path.exists(args.baseline) else {}
+        attempted = {_table_of(n) for n in fresh}
+        merged = {n: v for n, v in old.items()
+                  if _table_of(n) not in attempted}
+        merged.update(fresh)
+        payload = {"results": [{"name": n, "us_per_call": merged[n]}
+                               for n in sorted(merged)]}
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"baseline updated: {len(fresh)} rows merged into "
+              f"{args.baseline} ({len(merged)} total)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run with --update to seed it",
+              file=sys.stderr)
+        return 2
+    base = _load(args.baseline)
+    rows, regressions = compare(base, fresh, args.tolerance, table_tol)
+    report = render(rows)
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Benchmark comparison\n\n" + report + "\n")
+    if regressions:
+        print(f"\n{len(regressions)} metric(s) regressed past tolerance: "
+              + ", ".join(regressions), file=sys.stderr)
+        return 1
+    print(f"\nall {sum(1 for r in rows if r[5] == 'ok')} compared metrics "
+          "within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
