@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV and merges the same rows into
 ``BENCH_results.json`` (the CI artifact) *per table*: a run replaces only
 the tables it attempted, so a partial or BENCH_TABLES-filtered run no
 longer clobbers earlier results. Set BENCH_N / BENCH_APP_N / BENCH_BATCH_N
-/ BENCH_STORE_N / BENCH_SHARD_N / BENCH_SHARDS to scale (defaults sized
+/ BENCH_STORE_N / BENCH_SHARD_N / BENCH_SHARDS / BENCH_SERVE_* to scale
+(defaults sized
 for a single CPU core; the operations are row-parallel, see DESIGN.md §8
 for the pod-scale throughput argument), and BENCH_TABLES to a
 comma-separated list of table keys (e.g. ``table5,table7``) to run a
@@ -63,10 +64,10 @@ def main() -> None:
     from benchmarks import (fig1_growth, roofline_table, table1_lifecycle,
                             table2_incremental, table3_split,
                             table4_application, table5_batched,
-                            table6_storage, table7_sharding)
+                            table6_storage, table7_sharding, table9_serving)
     mods = [table1_lifecycle, table2_incremental, table3_split,
             table4_application, table5_batched, table6_storage,
-            table7_sharding, fig1_growth, roofline_table]
+            table7_sharding, table9_serving, fig1_growth, roofline_table]
     only = {w.strip() for w in os.environ.get("BENCH_TABLES", "").split(",")
             if w.strip()}
     if only:

@@ -55,6 +55,7 @@ import numpy as np
 from repro.kernels.shard_route import (ROUTING_VERSION, merge_shard_rows,
                                        route_keys)
 
+from . import store as store_mod
 from .placement import PlacedSuperLog, ShardPlacement, plan_placement
 from .store import (KIND_DELETED, KIND_UPDATED, FieldSchema,
                     Increment, Timestamp, VersionInfo, VersionView,
@@ -481,39 +482,52 @@ class ShardedStore:
     def get_versions(self, ts_list: Sequence[Timestamp], *,
                      fields: Sequence[str] | None = None,
                      key_filter: str | Callable[[bytes], bool] | None = None,
-                     include_deleted: bool = False) -> list[VersionView]:
+                     include_deleted: bool = False,
+                     cancel: Callable[[], bool] | None = None,
+                     trace: dict | None = None) -> list[VersionView]:
         """Batched get_versions, fanned out to every shard's fused-superlog
         scan and merged back into global (unsharded) row order. Duplicate
         timestamps share one merged view, as in ``VersionedStore``.
 
         Under a parallel placement the per-shard scans collapse into ONE
         device-parallel stacked launch (``_get_versions_parallel``) —
-        byte-identical results, the serial loop below is the fallback."""
+        byte-identical results, the serial loop below is the fallback.
+
+        ``cancel``/``trace`` follow the ``VersionedStore.get_versions``
+        contract: cancellation is polled between per-shard (or stacked)
+        stages, and stage seconds accumulate under the same keys."""
         fields = list(fields) if fields is not None else list(self.schema)
         ts_list = [int(t) for t in ts_list]
         if not ts_list:
             return []
+        store_mod._check_cancel(cancel)
         uniq = list(dict.fromkeys(ts_list))
         if self._use_parallel(len(uniq)):
             by_t = dict(zip(uniq, self._get_versions_parallel(
-                uniq, fields, key_filter, include_deleted)))
+                uniq, fields, key_filter, include_deleted,
+                cancel=cancel, trace=trace)))
             return [by_t[t] for t in ts_list]
-        per_shard = [self.shard(s).get_versions(
-            uniq, fields=fields, key_filter=key_filter,
-            include_deleted=include_deleted)
-            for s in range(self.n_shards)]
-        by_t: dict[int, VersionView] = {}
-        for qi, t in enumerate(uniq):
-            views = [per_shard[s][qi] for s in range(self.n_shards)]
-            rows, order = merge_shard_rows(
-                [self._shard_rows(s)[v.row_idx] for s, v in enumerate(views)])
-            values = {
-                name: np.concatenate([v.values[name] for v in views])[order]
-                for name in fields}
-            by_t[t] = VersionView(
-                ts=t, keys=[self.row_keys[r] for r in rows],
-                row_idx=rows.astype(np.int32), values=values)
-        return [by_t[t] for t in ts_list]
+        per_shard = []
+        for s in range(self.n_shards):
+            store_mod._check_cancel(cancel)
+            per_shard.append(self.shard(s).get_versions(
+                uniq, fields=fields, key_filter=key_filter,
+                include_deleted=include_deleted, cancel=cancel, trace=trace))
+        with store_mod._StageTimer(trace, "materialize"):
+            by_t: dict[int, VersionView] = {}
+            for qi, t in enumerate(uniq):
+                views = [per_shard[s][qi] for s in range(self.n_shards)]
+                rows, order = merge_shard_rows(
+                    [self._shard_rows(s)[v.row_idx]
+                     for s, v in enumerate(views)])
+                values = {
+                    name: np.concatenate([v.values[name]
+                                          for v in views])[order]
+                    for name in fields}
+                by_t[t] = VersionView(
+                    ts=t, keys=[self.row_keys[r] for r in rows],
+                    row_idx=rows.astype(np.int32), values=values)
+            return [by_t[t] for t in ts_list]
 
     def get_version(self, t: Timestamp, *,
                     fields: Sequence[str] | None = None,
@@ -523,7 +537,8 @@ class ShardedStore:
                                  include_deleted=include_deleted)[0]
 
     def _get_versions_parallel(self, uniq, fields, key_filter,
-                               include_deleted) -> list[VersionView]:
+                               include_deleted, cancel=None,
+                               trace=None) -> list[VersionView]:
         """MERGED views for the unique timestamps, one per ``uniq`` entry,
         from ONE stacked launch: the cross-shard ``PlacedSuperLog`` answers
         every shard's boundary cumsums together (one shard per device under
@@ -533,10 +548,12 @@ class ShardedStore:
         order — no per-shard intermediate views, no re-concatenation. The
         math per element is exactly ``VersionedStore.get_versions`` + the
         facade merge — byte-identical to the serial loop."""
-        placed, sls = self._placed_superlog()
-        nq, ns = len(uniq), self.n_shards
-        bcums = placed.boundary_cums(uniq)
-        ex = placed.exists_matrices(bcums, sls)
+        with store_mod._StageTimer(trace, "scan"):
+            placed, sls = self._placed_superlog()
+            nq, ns = len(uniq), self.n_shards
+            bcums = placed.boundary_cums(uniq)
+            ex = placed.exists_matrices(bcums, sls)
+        store_mod._check_cancel(cancel)
         # per-shard flat selections over ALL queries (row-major (qi, row)
         # nonzero order == the per-query loop order the serial path uses)
         sel_cat, qi_cat = [], []
@@ -563,23 +580,27 @@ class ShardedStore:
         lens_q = np.bincount(big_qi, minlength=nq)
         rows_q = np.split(rows_all, np.cumsum(lens_q)[:-1])
         values_q: list[dict] = [{} for _ in range(nq)]
-        for name in fields:
-            offs = placed.field_offsets(name, sls)
-            iparts, kparts = [], []
-            for s in range(ns):
-                f = sls[s].fields[name]
-                c = sls[s].counts(name, bcums[s])[qi_cat[s], sel_cat[s]]
-                iparts.append(offs[s] + np.clip(
-                    f.ptr[sel_cat[s]] + c - 1, 0, max(f.n_cells - 1, 0)))
-                kparts.append(c > 0)
-            for qi, v in enumerate(placed.take_cells(
-                    name, np.concatenate(iparts)[perm],
-                    np.concatenate(kparts)[perm], lens_q, sls)):
-                values_q[qi][name] = v
-        return [VersionView(ts=t, keys=[self.row_keys[r] for r in rows_q[qi]],
-                            row_idx=rows_q[qi].astype(np.int32),
-                            values=values_q[qi])
-                for qi, t in enumerate(uniq)]
+        store_mod._check_cancel(cancel)
+        with store_mod._StageTimer(trace, "gather"):
+            for name in fields:
+                offs = placed.field_offsets(name, sls)
+                iparts, kparts = [], []
+                for s in range(ns):
+                    f = sls[s].fields[name]
+                    c = sls[s].counts(name, bcums[s])[qi_cat[s], sel_cat[s]]
+                    iparts.append(offs[s] + np.clip(
+                        f.ptr[sel_cat[s]] + c - 1, 0, max(f.n_cells - 1, 0)))
+                    kparts.append(c > 0)
+                for qi, v in enumerate(placed.take_cells(
+                        name, np.concatenate(iparts)[perm],
+                        np.concatenate(kparts)[perm], lens_q, sls)):
+                    values_q[qi][name] = v
+        with store_mod._StageTimer(trace, "materialize"):
+            return [VersionView(ts=t,
+                                keys=[self.row_keys[r] for r in rows_q[qi]],
+                                row_idx=rows_q[qi].astype(np.int32),
+                                values=values_q[qi])
+                    for qi, t in enumerate(uniq)]
 
     def get_increments(self, pairs: Sequence[tuple[Timestamp, Timestamp]], *,
                        significant_fields: Sequence[str] | None = None,

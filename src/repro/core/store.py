@@ -42,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import re
+import time
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
@@ -54,6 +55,43 @@ Timestamp = int
 
 # device-side timestamps are int32 (JAX default int width); host keeps int64.
 TS_MAX = 2**31 - 2
+
+
+class OperationCancelled(RuntimeError):
+    """A cooperatively cancelled query (see ``get_versions(cancel=...)``).
+
+    The store is left untouched — cancellation points sit between read-only
+    stages, never inside a mutation — so a cancelled query can simply be
+    retried."""
+
+
+def _check_cancel(cancel: Callable[[], bool] | None) -> None:
+    """Cooperative cancellation point: queries accept an optional
+    ``cancel`` callable and poll it between expensive stages (superlog
+    build, batched scan, value gather). The serving front door
+    (serve/frontdoor.py) uses this to abandon waves whose every request
+    was cancelled or deadline-shed before paying for device work."""
+    if cancel is not None and cancel():
+        raise OperationCancelled("query cancelled between stages")
+
+
+class _StageTimer:
+    """Accumulate wall seconds into ``trace[stage]`` (no-op when trace is
+    None) — the per-stage latency hook the serving layer aggregates into
+    p50/p99 histograms. Additive: one trace dict can span a whole wave."""
+
+    def __init__(self, trace: dict | None, stage: str):
+        self._trace, self._stage = trace, stage
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        if self._trace is not None:
+            self._trace[self._stage] = (self._trace.get(self._stage, 0.0)
+                                        + time.perf_counter() - self._t0)
+        return False
 
 
 def _checked_cast(name: str, vals, dtype: np.dtype) -> np.ndarray:
@@ -882,7 +920,9 @@ class VersionedStore:
     def get_versions(self, ts_list: Sequence[Timestamp], *,
                      fields: Sequence[str] | None = None,
                      key_filter: str | Callable[[bytes], bool] | None = None,
-                     include_deleted: bool = False) -> list[VersionView]:
+                     include_deleted: bool = False,
+                     cancel: Callable[[], bool] | None = None,
+                     trace: dict | None = None) -> list[VersionView]:
         """Materialize MANY versions in one batched scan of the fused
         superlog (not len(ts_list) x n_fields kernel launches). Duplicate
         timestamps are materialized once and share the returned VersionView
@@ -900,39 +940,53 @@ class VersionedStore:
           fields: field subset (default: all).
           key_filter: regex (bytes-matched) or predicate over row keys.
           include_deleted: include tombstoned-but-once-alive rows.
+          cancel: optional zero-arg callable polled between stages; when
+            it returns True the query raises ``OperationCancelled`` (the
+            store is untouched — queries never mutate).
+          trace: optional dict accumulating per-stage wall seconds under
+            ``"scan"`` (superlog build + batched masked-cumsum + exists
+            resolution), ``"gather"`` (fused value gathers) and
+            ``"materialize"`` (view assembly). Additive across calls.
 
         Returns:
           list[VersionView] aligned with ``ts_list``.
 
         Raises:
           KeyError: an unknown field name.
+          OperationCancelled: ``cancel`` fired at a cancellation point.
         """
         fields = list(fields) if fields is not None else list(self.fields)
         ts_list = [int(t) for t in ts_list]
         if not ts_list:
             return []
+        _check_cancel(cancel)
         uniq = list(dict.fromkeys(ts_list))
         if len(uniq) == 1 and not self._superlog_fresh():
             v = self._get_version_cold(uniq[0], fields, key_filter,
-                                       include_deleted)
+                                       include_deleted, trace=trace)
             return [v] * len(ts_list)
-        sl = self.superlog()
-        bcum = sl.boundary_cums(uniq)
-        alive, ever = sl.exists_matrix(bcum)
+        with _StageTimer(trace, "scan"):
+            sl = self.superlog()
+            bcum = sl.boundary_cums(uniq)
+            alive, ever = sl.exists_matrix(bcum)
         if include_deleted:
             alive = ever
-        field_cnt = {name: sl.counts(name, bcum) for name in fields}
-        sels = [self._filter_sel(np.nonzero(alive[qi])[0], key_filter)
-                for qi in range(len(uniq))]
-        vals = {name: sl.gather_many(name, field_cnt[name], sels)
-                for name in fields}
-        by_t = {}
-        for qi, (t, sel) in enumerate(zip(uniq, sels)):
-            by_t[t] = VersionView(
-                ts=t, keys=[self.row_keys[r] for r in sel],
-                row_idx=sel.astype(np.int32),
-                values={name: vals[name][qi] for name in fields})
-        return [by_t[t] for t in ts_list]
+        _check_cancel(cancel)
+        with _StageTimer(trace, "gather"):
+            field_cnt = {name: sl.counts(name, bcum) for name in fields}
+            sels = [self._filter_sel(np.nonzero(alive[qi])[0], key_filter)
+                    for qi in range(len(uniq))]
+            vals = {name: sl.gather_many(name, field_cnt[name], sels)
+                    for name in fields}
+        _check_cancel(cancel)
+        with _StageTimer(trace, "materialize"):
+            by_t = {}
+            for qi, (t, sel) in enumerate(zip(uniq, sels)):
+                by_t[t] = VersionView(
+                    ts=t, keys=[self.row_keys[r] for r in sel],
+                    row_idx=sel.astype(np.int32),
+                    values={name: vals[name][qi] for name in fields})
+            return [by_t[t] for t in ts_list]
 
     def get_version(self, t: Timestamp, *, fields: Sequence[str] | None = None,
                     key_filter: str | Callable[[bytes], bool] | None = None,
@@ -941,21 +995,25 @@ class VersionedStore:
                                  include_deleted=include_deleted)[0]
 
     def _get_version_cold(self, t: Timestamp, fields: list[str],
-                          key_filter, include_deleted: bool) -> VersionView:
+                          key_filter, include_deleted: bool,
+                          trace: dict | None = None) -> VersionView:
         """Single-version materialization over the requested fields' own
         CSR logs (no fused-superlog build)."""
         # "ever existed" = any EXISTS cell with ts <= t; the found flag
         # matches _SuperLog.exists_matrix exactly (a windowed
         # changed_counts(-1, t) would drop cells at negative ts)
-        vals, found = self.exists_log.select_at(self.n_rows, t)
-        alive = found if include_deleted else (vals[:, 0] > 0) & found
-        sel = self._filter_sel(np.nonzero(alive)[0], key_filter)
-        values = {}
-        for name in fields:
-            vals, _found = self.fields[name].log.select_at(self.n_rows, t)
-            values[name] = vals[sel]
-        return VersionView(ts=t, keys=[self.row_keys[r] for r in sel],
-                           row_idx=sel.astype(np.int32), values=values)
+        with _StageTimer(trace, "scan"):
+            vals, found = self.exists_log.select_at(self.n_rows, t)
+            alive = found if include_deleted else (vals[:, 0] > 0) & found
+            sel = self._filter_sel(np.nonzero(alive)[0], key_filter)
+        with _StageTimer(trace, "gather"):
+            values = {}
+            for name in fields:
+                vals, _found = self.fields[name].log.select_at(self.n_rows, t)
+                values[name] = vals[sel]
+        with _StageTimer(trace, "materialize"):
+            return VersionView(ts=t, keys=[self.row_keys[r] for r in sel],
+                               row_idx=sel.astype(np.int32), values=values)
 
     # -- get_increment / get_increments (§III.C) -------------------------------
     def get_increments(self, pairs: Sequence[tuple[Timestamp, Timestamp]], *,

@@ -1,6 +1,13 @@
-"""Serving: batched engine, sampling, bucketed scheduler, and the GeStore
+"""Serving: batched engine, sampling, bucketed scheduler, the GeStore
 version-materialization service (gestore_service.py) with its tiered
-store-memory manager."""
+store-memory manager, and the multi-tenant front door (frontdoor.py)
+with admission control and backpressure."""
+from .frontdoor import (AdmissionError, DeadlineExceeded, FrontDoor,
+                        FrontDoorConfig, Overloaded, QueueFull)
 from .gestore_service import GeStoreService, TieredStorePool, VersionRequest
 
-__all__ = ["GeStoreService", "TieredStorePool", "VersionRequest"]
+__all__ = [
+    "AdmissionError", "DeadlineExceeded", "FrontDoor", "FrontDoorConfig",
+    "GeStoreService", "Overloaded", "QueueFull", "TieredStorePool",
+    "VersionRequest",
+]

@@ -31,9 +31,11 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig(),
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig | None = None,
                  run: RunConfig | None = None):
-        self.cfg, self.scfg = cfg, scfg
+        # fresh default per engine: a shared ServeConfig() instance would
+        # leak one caller's knob tweaks into every other engine
+        self.cfg, self.scfg = cfg, scfg if scfg is not None else ServeConfig()
         self.params = params
         self.bundle = build(cfg)
         run = run or RunConfig()

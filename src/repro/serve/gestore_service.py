@@ -117,6 +117,8 @@ class TieredStorePool:
             (n, None) for n in self._stores)
         self.stats = {"demotions": 0, "spills": 0, "shard_spills": 0,
                       "reloads": 0}
+        # decayed disk-churn score feeding pressure() — see that docstring
+        self._thrash = 0.0
 
     def _spill_path(self, name: str) -> str | None:
         if self._facade is not None:
@@ -162,6 +164,7 @@ class TieredStorePool:
             del self._spilled[name]
             self._stores[name] = st
             self.stats["reloads"] += 1
+            self._thrash += 1.0
         elif name in self._spilled:
             # someone else (e.g. GeStore.open_store) reloaded it into the
             # shared dict first; adopt it and keep the epoch guarantee
@@ -202,6 +205,28 @@ class TieredStorePool:
         """Total host+device bytes of every in-memory store."""
         return sum(sum(st.nbytes().values()) for st in self._stores.values())
 
+    #: pressure() = thrash / PRESSURE_SCALE, thrash halving per enforce():
+    #: a pool re-spilling what it just reloaded (2 events/cycle) converges
+    #: on thrash 4.0 => pressure 1.0, the canonical "thrashing" level.
+    PRESSURE_DECAY = 0.5
+    PRESSURE_SCALE = 4.0
+
+    def pressure(self) -> float:
+        """Backpressure signal for the serving layer, in [0, inf).
+
+        A decayed count of disk-tier churn events (whole-store spills,
+        shard spills, and lazy reloads; device->host demotions are cheap
+        and excluded): each event adds 1, and every ``enforce()`` cycle
+        halves the accumulated score before adding its own events. The
+        score is therefore deterministic — a function of the event
+        sequence, not of wall time — which the seeded scheduling tests
+        rely on. Calibration: 0 = calm (a pool comfortably within budget
+        decays to 0 geometrically); >= 1.0 = thrashing (the steady state
+        of a pool that reloads a store every wave only to spill it again).
+        The front door (serve/frontdoor.py) degrades reads to serial at
+        ``serial_pressure`` and sheds new reads at ``shed_pressure``."""
+        return self._thrash / self.PRESSURE_SCALE
+
     def enforce(self) -> int:
         """Evict coldest-first until within budget; returns evictions
         performed (a demotion, a shard spill, and a whole-store spill each
@@ -216,6 +241,7 @@ class TieredStorePool:
         out does the facade itself leave the pool like a plain store."""
         if self.budget_bytes is None:
             return 0
+        self._thrash *= self.PRESSURE_DECAY
         per_store = {name: sum(st.nbytes().values())
                      for name, st in self._stores.items()}
         total = sum(per_store.values())
@@ -250,6 +276,7 @@ class TieredStorePool:
                 while (total > self.budget_bytes
                        and st.spill_shard(root=path) is not None):
                     self.stats["shard_spills"] += 1
+                    self._thrash += 1.0
                     n += 1
                     recount(name, st)
                 if st.resident_shard_ids():
@@ -264,6 +291,7 @@ class TieredStorePool:
             self._lru.pop(name, None)
             total -= per_store.pop(name, 0)
             self.stats["spills"] += 1
+            self._thrash += 1.0
             n += 1
         return n
 
@@ -392,7 +420,38 @@ class GeStoreService:
         with self._flush_lock:
             return self._serve(pending)
 
-    def _serve(self, pending: list[tuple[VersionRequest, Future]]) -> int:
+    def serve_wave(self, items: list[tuple[VersionRequest, Future]], *,
+                   cancel=None, trace: dict | None = None,
+                   enforce_pool: bool = True) -> int:
+        """Serve a pre-assembled wave, bypassing the submit queue — the
+        front door's dispatch entry point (serve/frontdoor.py): it owns
+        wave composition (per-tenant fairness, priority, deadlines) and
+        this method owns execution (plan cache, batched scans, tiered
+        budget). ``cancel``/``trace`` follow the
+        ``VersionedStore.get_versions`` contract; ``enforce_pool=False``
+        skips budget enforcement for callers that enforce once per pump
+        cycle instead of per wave. Thread-safe (serializes with flush)."""
+        with self._flush_lock:
+            return self._serve(items, cancel=cancel, trace=trace,
+                               enforce_pool=enforce_pool)
+
+    def store(self, name: str):
+        """The live store for ``name`` through the tiered pool (reloading
+        a spilled store lazily) — the mutation path the front door uses.
+        Raises KeyError for an unknown store."""
+        return self._stores[name]
+
+    def pool_pressure(self) -> float:
+        """The tiered pool's backpressure signal (0.0 without a pool)."""
+        return 0.0 if self.pool is None else self.pool.pressure()
+
+    def enforce_pool(self) -> int:
+        """Enforce the tiered budget now (0 evictions without a pool)."""
+        return 0 if self.pool is None else self.pool.enforce()
+
+    def _serve(self, pending: list[tuple[VersionRequest, Future]], *,
+               cancel=None, trace: dict | None = None,
+               enforce_pool: bool = True) -> int:
         groups: dict[tuple, list[tuple[VersionRequest, Future]]] = {}
         for req, fut in pending:
             groups.setdefault(req.group_key(), []).append((req, fut))
@@ -414,7 +473,8 @@ class GeStoreService:
                         [pk[0] for pk in chunk],
                         fields=list(fields) if fields is not None else None,
                         key_filter=key_filter,
-                        include_deleted=include_deleted)
+                        include_deleted=include_deleted,
+                        cancel=cancel, trace=trace)
                     self.stats["batches"] += 1
                     for view in views:
                         # memoized views are shared across clients: freeze
@@ -437,6 +497,6 @@ class GeStoreService:
                 for _, fut in items:
                     if not fut.done() and fut.set_running_or_notify_cancel():
                         fut.set_exception(e)
-        if self.pool is not None:
+        if enforce_pool and self.pool is not None:
             self.pool.enforce()
         return len(pending)

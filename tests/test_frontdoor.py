@@ -1,0 +1,369 @@
+"""Front door (serve/frontdoor.py): admission control, priority/deadline
+scheduling, rider batching, fairness, backpressure, and the concurrency
+stress suite vs a serial oracle replay.
+
+Determinism: scheduling tests drive the door with ``pump()`` (no thread)
+and an injected fake clock, so wave formation is a pure function of the
+submission sequence. The stress test uses the background dispatcher with
+seeded per-thread workloads and checks results against a serial replay.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # optional-hypothesis shim
+from repro.core.store import FieldSchema, VersionedStore
+from repro.serve import (DeadlineExceeded, FrontDoor, FrontDoorConfig,
+                         Overloaded, QueueFull)
+
+SEED = 20260808
+
+
+def mk_store(name, seed, n=24, releases=3, width=4):
+    rng = np.random.default_rng(seed)
+    st_ = VersionedStore(name, [FieldSchema("a", width, "int32")])
+    keys = [f"{name}-k{i}" for i in range(n)]
+    for v in range(1, releases + 1):
+        st_.update(v * 10, keys,
+                   {"a": rng.integers(0, 99, (n, width)).astype(np.int32)})
+    return st_
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# -- batching + scheduling (deterministic, caller-pumped) ---------------------
+
+def test_riders_share_one_wave_and_one_view():
+    fd = FrontDoor({"G": mk_store("G", SEED)})
+    f1 = fd.submit("alice", "G", 20)
+    f2 = fd.submit("bob", "G", 20)
+    f3 = fd.submit("carol", "G", 30)    # same group, different plan key
+    assert fd.pump() == 1               # one wave serves all three
+    assert f1.result(0) is f2.result(0)  # memoized view shared
+    assert len(f3.result(0).keys) == 24
+    log = fd.dispatch_log
+    assert len(log) == 1 and sorted(log[0]["members"]) == [1, 2, 3]
+    assert sorted(log[0]["riders"]) == [2, 3]
+    assert fd.counters["riders"] == 2 and fd.counters["waves"] == 1
+
+
+def test_priority_orders_dispatch_within_tenant():
+    stores = {n: mk_store(n, SEED + i) for i, n in enumerate("ABC")}
+    fd = FrontDoor(stores)
+    fd.submit("t", "A", 10, priority=0)
+    fd.submit("t", "B", 10, priority=9)
+    fd.submit("t", "C", 10, priority=4)
+    fd.pump()
+    order = [d["store"] for d in fd.dispatch_log]
+    assert order == ["B", "C", "A"]
+
+
+def test_same_priority_is_fifo_and_mutations_dispatch_alone():
+    fd = FrontDoor({"G": mk_store("G", SEED)})
+    keys = [f"G-k{i}" for i in range(4)]
+    tbl = {"a": np.ones((4, 4), np.int32)}
+    f1 = fd.submit_update("w", "G", 40, keys, tbl, full_release=False)
+    f2 = fd.submit_update("w", "G", 50, keys, tbl, full_release=False)
+    f3 = fd.submit("w", "G", 50)
+    fd.pump()
+    # same priority = pure FIFO by submit order; mutations run alone
+    assert [d["kind"] for d in fd.dispatch_log] == [
+        "update", "update", "get_versions"]
+    assert [len(d["members"]) for d in fd.dispatch_log] == [1, 1, 1]
+    assert f1.result(0).ts == 40 and f2.result(0).ts == 50
+    assert len(f3.result(0).keys) == 24
+
+
+def test_read_your_writes():
+    fd = FrontDoor({"G": mk_store("G", SEED)})
+    keys = [f"G-k{i}" for i in range(24)]
+    fut = fd.submit_update("w", "G", 40, keys,
+                           {"a": np.full((24, 4), 7, np.int32)})
+    fd.pump()
+    fut.result(0)                      # mutation visible once resolved
+    got = fd.submit("r", "G", 40)
+    fd.pump()
+    assert (got.result(0).values["a"] == 7).all()
+
+
+def test_fairness_bounded_interleave():
+    stores = {"A": mk_store("A", SEED), "B": mk_store("B", SEED + 1)}
+    # max_wave=1: no riders, every request is its own wave
+    fd = FrontDoor(stores, config=FrontDoorConfig(max_wave=1))
+    for _ in range(10):
+        fd.submit("big", "A", 20)
+    for _ in range(3):
+        fd.submit("small", "B", 20)
+    fd.pump()
+    tenants = [d["tenant"] for d in fd.dispatch_log]
+    assert len(tenants) == 13
+    # round-robin: while both are pending, no tenant waits more than
+    # n_tenants waves between dispatches
+    small_waves = [i for i, t in enumerate(tenants) if t == "small"]
+    assert small_waves[0] <= 2
+    for a, b in zip(small_waves, small_waves[1:]):
+        assert b - a <= 2, f"small starved between waves {a} and {b}"
+
+
+def test_max_wave_caps_batch():
+    fd = FrontDoor({"G": mk_store("G", SEED)},
+                   config=FrontDoorConfig(max_wave=2))
+    futs = [fd.submit("t", "G", 20) for _ in range(5)]
+    fd.pump()
+    assert fd.counters["waves"] == 3
+    assert all(len(d["members"]) <= 2 for d in fd.dispatch_log)
+    for f in futs:
+        f.result(0)
+
+
+# -- admission policy ---------------------------------------------------------
+
+def test_queue_full_rejects_at_submit():
+    fd = FrontDoor({"G": mk_store("G", SEED)},
+                   config=FrontDoorConfig(max_queue_per_tenant=2))
+    fd.submit("t", "G", 10)
+    fd.submit("t", "G", 20)
+    with pytest.raises(QueueFull):
+        fd.submit("t", "G", 30)
+    # bound is per tenant: another tenant still admitted
+    fd.submit("u", "G", 10)
+    assert fd.counters["rejected_queue_full"] == 1
+    assert fd.pump() >= 1 and fd.queued() == 0
+    fd.submit("t", "G", 30)            # drained queue admits again
+
+
+def test_deadline_shed_via_future():
+    clk = FakeClock()
+    fd = FrontDoor({"G": mk_store("G", SEED)},
+                   config=FrontDoorConfig(clock=clk))
+    doomed = fd.submit("t", "G", 20, timeout=1.0)
+    alive = fd.submit("t", "G", 20)    # no deadline
+    clk.t = 5.0
+    fd.pump()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(0)
+    assert len(alive.result(0).keys) == 24
+    assert fd.counters["shed_deadline"] == 1
+    assert fd.stats()["per_tenant"]["t"]["shed_deadline"] == 1
+
+
+def test_pressure_sheds_reads_but_never_mutations(tmp_path):
+    fd = FrontDoor({"G": mk_store("G", SEED)},
+                   memory_budget_bytes=1 << 30, spill_root=str(tmp_path))
+    fd.service.pool._thrash = 99.0     # force pressure >= shed_pressure
+    assert fd.service.pool_pressure() >= fd.config.shed_pressure
+    with pytest.raises(Overloaded):
+        fd.submit("t", "G", 20)
+    keys = [f"G-k{i}" for i in range(4)]
+    fut = fd.submit_update("t", "G", 40, keys,
+                           {"a": np.ones((4, 4), np.int32)},
+                           full_release=False)     # ingest never shed
+    fd.pump()
+    assert fut.result(0).ts == 40
+    assert fd.counters["rejected_pressure"] == 1
+
+
+def test_pressure_degrades_wave_to_serial(tmp_path):
+    # spill_root alone: a pool with no byte budget, so enforce() never
+    # decays the injected pressure mid-test
+    fd = FrontDoor({"G": mk_store("G", SEED)}, spill_root=str(tmp_path))
+    cfg = fd.config
+    # between serial_pressure and shed_pressure: admit, but don't batch
+    fd.service.pool._thrash = cfg.serial_pressure * 4.0
+    assert (cfg.serial_pressure <= fd.service.pool_pressure()
+            < cfg.shed_pressure)
+    f1 = fd.submit("a", "G", 20)
+    f2 = fd.submit("b", "G", 20)       # would ride when calm
+    fd.pump()
+    assert fd.counters["serial_degrades"] == 2
+    assert all(d["degraded"] and len(d["members"]) == 1
+               for d in fd.dispatch_log)
+    assert f1.result(0) is f2.result(0)   # plan cache still dedupes
+
+
+def test_failed_mutation_isolated():
+    fd = FrontDoor({"G": mk_store("G", SEED)})
+    keys = [f"G-k{i}" for i in range(4)]
+    bad = fd.submit_update("w", "G", 5, keys,       # 5 <= last_ts: rejected
+                          {"a": np.ones((4, 4), np.int32)})
+    ok = fd.submit("r", "G", 20)
+    fd.pump()
+    with pytest.raises(ValueError, match="monotonic"):
+        bad.result(0)
+    assert len(ok.result(0).keys) == 24
+    assert fd.counters["failed"] == 1 and fd.counters["completed"] == 1
+
+
+def test_cancelled_before_dispatch_skips_work():
+    fd = FrontDoor({"G": mk_store("G", SEED)})
+    fut = fd.submit("t", "G", 20)
+    assert fut.cancel()
+    fd.pump()
+    assert fut.cancelled()
+    assert fd.counters["cancelled"] == 1 and fd.counters["completed"] == 0
+
+
+# -- stats --------------------------------------------------------------------
+
+def test_stats_histograms_and_counters():
+    fd = FrontDoor({"G": mk_store("G", SEED)})
+    for i in range(4):
+        fd.submit("t", "G", 20 + 10 * (i % 2))
+    fd.pump()
+    s = fd.stats()
+    lat = s["latency"]
+    for stage in ("queue", "batch", "scan", "gather", "materialize",
+                  "exec", "total"):
+        assert stage in lat and {"n", "p50_ms", "p99_ms"} <= set(lat[stage])
+    assert lat["total"]["n"] == 4 and lat["total"]["p99_ms"] >= 0.0
+    assert lat["scan"]["n"] >= 1       # cold wave really hit the scan stage
+    assert s["counters"]["completed"] == 4
+    assert s["per_tenant"]["t"]["completed"] == 4
+    assert s["queued"] == {"t": 0}
+    assert "pool_pressure" in s and s["service"]["requests"] == 0
+
+
+# -- concurrency stress vs serial oracle --------------------------------------
+
+N_READERS, READS_EACH, RELEASES = 4, 20, 5
+
+
+def _writer(fd, store, tenant, seed, published, applied, lock, errors):
+    wrng = np.random.default_rng(seed)
+    keys = [f"{store}-k{i}" for i in range(24)]
+    try:
+        for r in range(RELEASES):
+            ts = 40 + r * 10
+            table = {"a": wrng.integers(0, 99, (24, 4)).astype(np.int32)}
+            fd.submit_update(tenant, store, ts, keys, table).result(60)
+            with lock:
+                applied[store].append((ts, keys, table))
+                published[store].append(ts)
+            if r == RELEASES // 2:
+                # mixed traffic includes compaction; before_ts at the
+                # oldest release keeps every published ts byte-stable
+                # (compact contract: get_version(t>=before_ts) unchanged)
+                fd.submit_compact(tenant, store, 10).result(60)
+    except Exception as e:  # noqa: BLE001 — surfaced by the main thread
+        errors.append(("writer", store, e))
+
+
+def _reader(fd, idx, published, lock, reads, errors):
+    rrng = np.random.default_rng(SEED + 100 + idx)
+    tenant = f"reader-{idx}"
+    try:
+        for _ in range(READS_EACH):
+            store_name = ("S1", "S2")[int(rrng.integers(0, 2))]
+            with lock:
+                opts = published[store_name]
+                ts = opts[int(rrng.integers(0, len(opts)))]
+            fut = fd.submit(tenant, store_name, int(ts),
+                            priority=int(rrng.integers(0, 3)))
+            reads.append((store_name, int(ts), fut))
+    except Exception as e:  # noqa: BLE001
+        errors.append(("reader", idx, e))
+
+
+def test_stress_concurrent_matches_serial_oracle():
+    stores = {"S1": mk_store("S1", SEED + 1), "S2": mk_store("S2", SEED + 2)}
+    fd = FrontDoor(stores, config=FrontDoorConfig(max_queue_per_tenant=4096))
+    published = {"S1": [10, 20, 30], "S2": [10, 20, 30]}
+    applied = {"S1": [], "S2": []}
+    lock = threading.Lock()
+    errors, reads = [], []
+
+    threads = [threading.Thread(target=_writer, args=(
+        fd, s, f"writer-{s}", SEED + 10 + i, published, applied, lock,
+        errors)) for i, s in enumerate(("S1", "S2"))]
+    threads += [threading.Thread(target=_reader, args=(
+        fd, i, published, lock, reads, errors))
+        for i in range(N_READERS)]
+
+    with fd:                           # background dispatcher
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "deadlock: thread stuck"
+    assert not errors, errors
+
+    # serial oracle: fresh stores, same seeds, mutations replayed in the
+    # order their futures resolved (per store = writer submission order)
+    oracle = {"S1": mk_store("S1", SEED + 1), "S2": mk_store("S2", SEED + 2)}
+    for name, muts in applied.items():
+        for ts, keys, table in muts:
+            oracle[name].update(ts, keys, table)
+    assert all(len(m) == RELEASES for m in applied.values())
+
+    assert len(reads) == N_READERS * READS_EACH
+    for store_name, ts, fut in reads:
+        got = fut.result(60)
+        want = oracle[store_name].get_version(ts, fields=["a"])
+        assert [bytes(k) for k in got.keys] == [bytes(k) for k in want.keys]
+        assert np.array_equal(got.values["a"], want.values["a"]), \
+            f"{store_name}@{ts}: concurrent result diverged from oracle"
+
+    s = fd.stats()
+    assert s["counters"]["failed"] == 0
+    assert s["counters"]["completed"] == (
+        len(reads) + 2 * RELEASES + 2)  # reads + updates + compacts
+    # every tenant that submitted got served
+    assert len(s["per_tenant"]) == N_READERS + 2
+
+
+# -- property test: admission + ordering policy (optional hypothesis) ---------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2),                    # tenant
+                          st.integers(0, 2),                    # store
+                          st.integers(-2, 5),                   # priority
+                          st.one_of(st.none(),
+                                    st.integers(-5, 5))),       # deadline
+                min_size=1, max_size=32))
+def test_property_shed_policy_and_priority_order(stream):
+    stores = {f"P{i}": mk_store(f"P{i}", SEED + i, n=4, releases=1)
+              for i in range(3)}
+    clk = FakeClock(0.0)
+    fd = FrontDoor(stores, config=FrontDoorConfig(
+        clock=clk, max_queue_per_tenant=4096))
+    tickets = {}
+    for seq0, (tenant, store, prio, dl) in enumerate(stream):
+        fut = fd.submit(f"t{tenant}", f"P{store}", 10, priority=prio,
+                        timeout=None if dl is None else float(dl))
+        tickets[seq0 + 1] = (f"t{tenant}", f"P{store}", prio,
+                             None if dl is None else float(dl), fut)
+    clk.t = 1.0
+    fd.pump()
+
+    for seq, (tenant, store, prio, dl, fut) in tickets.items():
+        assert fut.done(), f"request {seq} neither served nor shed"
+        # documented admission policy: the ONLY asynchronous shed is a
+        # deadline in the past when the scheduler considered the request
+        if dl is not None and dl < clk.t:
+            assert isinstance(fut.exception(), DeadlineExceeded), seq
+        else:
+            assert fut.exception() is None, fut.exception()
+
+    # per tenant, wave initiators follow (-priority, deadline, seq):
+    # removals (riders, sheds) never reorder the remaining queue
+    by_tenant = {}
+    for d in fd.dispatch_log:
+        by_tenant.setdefault(d["tenant"], []).append(d["initiator"])
+    for tenant, seqs in by_tenant.items():
+        keys = []
+        for seq in seqs:
+            _, _, prio, dl, _ = tickets[seq]
+            keys.append((-prio, dl if dl is not None else float("inf"), seq))
+        assert keys == sorted(keys), f"{tenant}: initiators out of order"
+
+    # riders only ever join a wave for their own group
+    for d in fd.dispatch_log:
+        stores_in_wave = {tickets[m][1] for m in d["members"]}
+        assert len(stores_in_wave) == 1

@@ -1,0 +1,73 @@
+"""serve/scheduler.py unit tests (stub engine — no model build, no jit)
+plus the ServeConfig default-instance regression (serve/engine.py)."""
+import inspect
+
+import numpy as np
+
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import Request, Scheduler, _bucket
+
+
+class StubEngine:
+    """Duck-types the two things Scheduler touches: scfg.pad_id and
+    generate(). Echoes the batch shape so tests can audit padding."""
+
+    def __init__(self, pad_id=0, new_tokens=4):
+        self.scfg = ServeConfig(pad_id=pad_id)
+        self.new_tokens = new_tokens
+        self.calls: list[np.ndarray] = []
+
+    def generate(self, batch, *, seed=0):
+        self.calls.append(np.array(batch))
+        b = batch.shape[0]
+        return np.tile(np.arange(self.new_tokens, dtype=np.int32), (b, 1))
+
+
+def test_bucket_rounds_to_pow2_with_floor():
+    assert _bucket(1) == 16
+    assert _bucket(16) == 16
+    assert _bucket(17) == 32
+    assert _bucket(100) == 128
+
+
+def test_submit_routes_by_bucket_and_pads():
+    eng = StubEngine(pad_id=-7)
+    sched = Scheduler(eng, max_batch=8)
+    sched.submit("a", np.arange(5))
+    sched.submit("b", np.arange(20))
+    assert sorted(sched.queues) == [16, 32]
+    res = sched.run_until_drained()
+    assert res["n_done"] == 2
+    # one batch per bucket, padded to the bucket width with pad_id
+    shapes = sorted(c.shape for c in eng.calls)
+    assert shapes == [(1, 16), (1, 32)]
+    short = next(c for c in eng.calls if c.shape == (1, 16))
+    assert np.array_equal(short[0, :5], np.arange(5))
+    assert (short[0, 5:] == -7).all()
+
+
+def test_max_batch_splits_full_buckets():
+    eng = StubEngine()
+    sched = Scheduler(eng, max_batch=2)
+    for i in range(5):
+        sched.submit(f"r{i}", np.arange(8))
+    res = sched.run_until_drained()
+    assert res["n_done"] == 5
+    assert [c.shape[0] for c in eng.calls] == [2, 2, 1]
+    assert set(sched.done) == {f"r{i}" for i in range(5)}
+    assert all(isinstance(r, Request) and r.output is not None
+               for r in sched.done.values())
+    assert res["p50_latency_s"] >= 0.0 and res["p99_latency_s"] >= 0.0
+
+
+def test_drain_empty_queue_reports_zero():
+    sched = Scheduler(StubEngine())
+    res = sched.run_until_drained()
+    assert res == {"n_done": 0, "p50_latency_s": 0.0, "p99_latency_s": 0.0}
+
+
+def test_serve_config_default_not_shared():
+    # regression: `scfg: ServeConfig = ServeConfig()` handed every engine
+    # the same instance, so one caller's knob tweak leaked into all
+    sig = inspect.signature(ServeEngine.__init__)
+    assert sig.parameters["scfg"].default is None

@@ -165,3 +165,98 @@ def test_store_nbytes_tracks_superlog(rng):
     assert with_dev["device"] > 0
     st.drop_superlog()
     assert st.nbytes()["device"] == 0
+
+
+# -- fault injection: segment reads failing mid-wave --------------------------
+
+import pytest
+
+from repro.core.segments import CorruptSegmentError, store_dir_name
+
+
+@pytest.fixture
+def chaos(monkeypatch):
+    """Arm per-store segment-read fault injection. Set ``state["target"]``
+    to a store name and ``state["exc"]`` to the instance to raise; every
+    segment read under that store's directory then fails. Reset
+    ``target`` to None to heal."""
+    import repro.core.segments as segments
+
+    state = {"target": None, "exc": CorruptSegmentError("injected"),
+             "hits": 0}
+    real = segments.read_segment
+
+    def wrapped(root, *args, **kwargs):
+        t = state["target"]
+        if t is not None and store_dir_name(t) in str(root):
+            state["hits"] += 1
+            raise state["exc"]
+        return real(root, *args, **kwargs)
+
+    monkeypatch.setattr(segments, "read_segment", wrapped)
+    return state
+
+
+@pytest.mark.parametrize("exc", [CorruptSegmentError("injected bit rot"),
+                                 OSError("injected disk failure")])
+def test_chaos_wave_fails_only_affected_group(rng, tmp_path, chaos, exc):
+    """A segment read failing mid-wave fails exactly the requests touching
+    that store; the rest of the wave is served and the pool stays
+    consistent (the spill record survives, so the error keeps surfacing
+    instead of decaying into a KeyError)."""
+    from concurrent.futures import Future
+
+    stores = {"A": mk_store("A", rng), "B": mk_store("B", rng)}
+    want_a = stores["A"].get_version(20, fields=["a"])
+    want_b = stores["B"].get_version(20, fields=["a"])
+    svc = GeStoreService(stores, memory_budget_bytes=1,
+                         spill_root=str(tmp_path))
+    assert svc.pool.enforce() >= 2        # both stores fully on disk
+
+    chaos["target"], chaos["exc"] = "A", exc
+    items = [(VersionRequest("A", 20, ("a",)), Future()),
+             (VersionRequest("B", 20, ("a",)), Future())]
+    svc.serve_wave(items)
+    with pytest.raises(type(exc)):
+        items[0][1].result(0)
+    assert chaos["hits"] >= 1
+    got_b = items[1][1].result(0)         # other group served in-wave
+    assert np.array_equal(got_b.values["a"], want_b.values["a"])
+    assert "A" in svc.pool                # consistent: still addressable
+
+    chaos["target"] = None                # heal the disk
+    got_a = svc.materialize([VersionRequest("A", 20, ("a",))])[0]
+    assert got_a.keys == want_a.keys
+    assert np.array_equal(got_a.values["a"], want_a.values["a"])
+
+
+def test_chaos_frontdoor_keeps_serving_other_tenants(rng, tmp_path, chaos):
+    """Through the front door: one tenant's store going bad fails that
+    tenant's requests with the real error while other tenants keep being
+    served; after healing, the store serves byte-identical data."""
+    from repro.serve import FrontDoor
+
+    stores = {"A": mk_store("A", rng), "B": mk_store("B", rng)}
+    want_a = stores["A"].get_version(30, fields=["a"])
+    fd = FrontDoor(stores, memory_budget_bytes=1, spill_root=str(tmp_path))
+    assert fd.service.pool.enforce() >= 2
+
+    chaos["target"] = "A"
+    doomed = fd.submit("tenant-a", "A", 30)
+    fine = fd.submit("tenant-b", "B", 30)
+    fd.pump()
+    with pytest.raises(CorruptSegmentError):
+        doomed.result(0)
+    assert len(fine.result(0).keys) == 120
+    s = fd.stats()
+    assert s["counters"]["failed"] == 1
+    assert s["per_tenant"]["tenant-a"]["failed"] == 1
+    assert s["per_tenant"]["tenant-b"]["completed"] == 1
+
+    chaos["target"] = None
+    healed = fd.submit("tenant-a", "A", 30)
+    fd.pump()
+    got = healed.result(0)
+    assert got.keys == want_a.keys
+    assert np.array_equal(got.values["a"], want_a.values["a"])
+    assert fd.stats()["per_tenant"]["tenant-a"]["completed"] == 1
