@@ -64,10 +64,12 @@ def main() -> None:
     from benchmarks import (fig1_growth, roofline_table, table1_lifecycle,
                             table2_incremental, table3_split,
                             table4_application, table5_batched,
-                            table6_storage, table7_sharding, table9_serving)
+                            table6_storage, table7_sharding, table9_serving,
+                            table10_observability)
     mods = [table1_lifecycle, table2_incremental, table3_split,
             table4_application, table5_batched, table6_storage,
-            table7_sharding, table9_serving, fig1_growth, roofline_table]
+            table7_sharding, table9_serving, table10_observability,
+            fig1_growth, roofline_table]
     only = {w.strip() for w in os.environ.get("BENCH_TABLES", "").split(",")
             if w.strip()}
     if only:

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.kernels.batched_select import stacked_boundary_select
 from repro.launch.mesh import make_shard_mesh
+from repro.obs import kerneltel
 
 from .store import _SuperLog, _clamp_ts
 
@@ -157,8 +158,18 @@ class PlacedSuperLog:
         qs = np.asarray([_clamp_ts(t) for t in ts_list], np.int32)
         if self.n_cells == 0 or not len(qs):
             return [np.zeros((len(qs), w), np.int32) for w in self.b_widths]
-        out = np.asarray(stacked_boundary_select(
-            self._ts, jnp.asarray(qs), self._bnd, mesh=self.mesh))
+        q = len(qs)
+        s, cmax = self._ts.shape
+        bmax = self._bnd.shape[1]
+        # stacked traffic model (padded shapes are what actually move):
+        # read the (S, Cmax) ts stack, write the per-shard (Q, Cmax)
+        # cumsums, read+write the (S, Q, Bmax) boundary selections
+        with kerneltel.launch("batched_select",
+                              nbytes=4 * (s * cmax + s * q * cmax
+                                          + 2 * s * q * bmax),
+                              flops=2 * s * q * cmax):
+            out = np.asarray(stacked_boundary_select(
+                self._ts, jnp.asarray(qs), self._bnd, mesh=self.mesh))
         return [out[i, :, : w] for i, w in enumerate(self.b_widths)]
 
     # -- fused cross-shard value gathers --------------------------------------

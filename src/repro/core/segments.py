@@ -79,6 +79,8 @@ from typing import TYPE_CHECKING, Sequence
 import numpy as np
 
 from repro.kernels.delta_codec import chain_pack, chain_unpack
+from repro.obs import RECORDER, REGISTRY
+from repro.obs.trace import StageTimer
 
 if TYPE_CHECKING:  # avoid a circular import; store.py imports us lazily
     from .store import VersionedStore
@@ -260,7 +262,19 @@ class SegmentHandle:
         return self.seg.n_cells
 
     def materialize(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        return read_segment(self.root, self.seg, self.dtype, self.width)
+        # instrument the CALLER, not read_segment itself: fault-injection
+        # tests replace the module-level read_segment wholesale, and an
+        # injected failure must still land in the flight recorder with
+        # the active trace id attached
+        try:
+            with StageTimer(None, "segment_read"):
+                return read_segment(self.root, self.seg, self.dtype,
+                                    self.width)
+        except Exception as e:  # noqa: BLE001 — recorded, then re-raised
+            REGISTRY.counter("segments.read_errors").inc()
+            RECORDER.record("segment_read_error", path=self.seg.path,
+                            root=self.root, error=repr(e))
+            raise
 
 
 # -- manifest I/O -------------------------------------------------------------

@@ -42,7 +42,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import re
-import time
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
@@ -50,6 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.obs import kerneltel
+from repro.obs.trace import StageTimer
 
 Timestamp = int
 
@@ -75,23 +76,11 @@ def _check_cancel(cancel: Callable[[], bool] | None) -> None:
         raise OperationCancelled("query cancelled between stages")
 
 
-class _StageTimer:
-    """Accumulate wall seconds into ``trace[stage]`` (no-op when trace is
-    None) — the per-stage latency hook the serving layer aggregates into
-    p50/p99 histograms. Additive: one trace dict can span a whole wave."""
-
-    def __init__(self, trace: dict | None, stage: str):
-        self._trace, self._stage = trace, stage
-
-    def __enter__(self):
-        self._t0 = time.perf_counter()
-        return self
-
-    def __exit__(self, *exc):
-        if self._trace is not None:
-            self._trace[self._stage] = (self._trace.get(self._stage, 0.0)
-                                        + time.perf_counter() - self._t0)
-        return False
+# the per-stage latency hook the serving layer aggregates into p50/p99
+# histograms, migrated onto the shared observability layer: same additive
+# trace-dict contract, now also feeding the active trace span and the
+# process-wide stage histograms (core/shard.py uses it via this alias).
+_StageTimer = StageTimer
 
 
 def _checked_cast(name: str, vals, dtype: np.dtype) -> np.ndarray:
@@ -455,11 +444,20 @@ class _SuperLog:
         qs = np.asarray([_clamp_ts(t) for t in ts_list], np.int32)
         out = np.zeros((len(qs), len(self.boundaries)), np.int32)
         if self.n_cells and len(qs):
-            cum = kops.batched_masked_cumsum(self.ts, jnp.asarray(qs))
-            at = jnp.take(cum, jnp.asarray(np.maximum(self.boundaries - 1, 0)),
-                          axis=1)
-            at = jnp.where(jnp.asarray(self.boundaries == 0)[None, :], 0, at)
-            out = np.asarray(at)
+            q, c, b = len(qs), self.n_cells, len(self.boundaries)
+            # traffic model: read the fused ts once (C*4), write the
+            # (Q, C) running cumsum, read+write the (Q, B) boundary
+            # columns; arithmetic: one compare + one add per (q, cell)
+            with kerneltel.launch("batched_select",
+                                  nbytes=4 * (c + q * c + 2 * q * b),
+                                  flops=2 * q * c):
+                cum = kops.batched_masked_cumsum(self.ts, jnp.asarray(qs))
+                at = jnp.take(cum,
+                              jnp.asarray(np.maximum(self.boundaries - 1, 0)),
+                              axis=1)
+                at = jnp.where(jnp.asarray(self.boundaries == 0)[None, :],
+                               0, at)
+                out = np.asarray(at)
         return out
 
     # -- per-field boundary math ----------------------------------------------

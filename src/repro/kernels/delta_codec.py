@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.obs import kerneltel
+
 from . import ref
 from ._compat import cdiv, interpret_default
 
@@ -161,6 +163,14 @@ def chain_pack(vals: np.ndarray, rows: np.ndarray) -> tuple[np.ndarray, dict]:
     """
     if len(vals) == 0:
         return vals.copy(), {"mode": "raw", "dtype": vals.dtype.name}
+    # traffic model: read new + predecessor cells, write the delta;
+    # arithmetic: one sub/xor per element (the narrowing stat rides along)
+    with kerneltel.launch("delta_codec", nbytes=3 * vals.nbytes,
+                          flops=vals.size):
+        return _chain_pack_timed(vals, rows)
+
+
+def _chain_pack_timed(vals: np.ndarray, rows: np.ndarray) -> tuple[np.ndarray, dict]:
     first = np.ones(len(rows), bool)
     first[1:] = rows[1:] != rows[:-1]
     prev = np.roll(vals, 1, axis=0)
@@ -220,6 +230,15 @@ def chain_unpack(packed: np.ndarray, rows: np.ndarray, meta: dict,
     """
     if meta["mode"] == "raw" or len(packed) == 0:
         return packed.astype(out_dtype)
+    # traffic model mirrors chain_pack's: read delta + predecessor,
+    # write the reconstruction; one add/xor per element
+    with kerneltel.launch("delta_codec", nbytes=3 * packed.nbytes,
+                          flops=packed.size):
+        return _chain_unpack_timed(packed, rows, meta, out_dtype)
+
+
+def _chain_unpack_timed(packed: np.ndarray, rows: np.ndarray, meta: dict,
+                        out_dtype: np.dtype) -> np.ndarray:
     stored = np.dtype(meta["dtype"])
     delta = packed.astype(stored) if "narrow" in meta else packed
     out = delta.copy()

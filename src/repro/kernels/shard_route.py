@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.obs import kerneltel
+
 from . import ref
 from ._compat import cdiv, interpret_default
 
@@ -111,8 +113,14 @@ def route_keys(keys: Sequence[bytes], n_shards: int) -> np.ndarray:
     if n_shards == 1:
         return np.zeros(len(keys), np.int32)
     lanes, lens = key_lanes(keys)
-    return np.asarray(shard_route(jnp.asarray(lanes), jnp.asarray(lens),
-                                  int(n_shards)))
+    n, w = lanes.shape
+    # traffic model: read (N, W) lanes + (N,) lengths, write (N,) ids;
+    # arithmetic: ~8 integer ops per lane in the xor-rotate fold + the
+    # 5-op finalizer per key
+    with kerneltel.launch("shard_route", nbytes=4 * (n * w + 2 * n),
+                          flops=n * (8 * w + 5)):
+        return np.asarray(shard_route(jnp.asarray(lanes), jnp.asarray(lens),
+                                      int(n_shards)))
 
 
 def merge_shard_rows(parts: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:

@@ -28,6 +28,7 @@ import jax
 from repro.configs.base import (ARCH_IDS, RunConfig, SHAPES, get_config,
                                 shapes_for)
 from repro.launch import roofline as rl
+from repro.obs.log import configure as configure_logging, get_logger
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import default_hyper, make_prefill_step, \
     make_serve_step, make_train_step
@@ -37,6 +38,8 @@ from repro.sharding import (abstract_tree, shard_batch_specs,
 from repro.train.optimizer import state_specs
 
 RESULTS_DIR = "experiments/dryrun"
+
+log = get_logger("launch.dryrun")
 
 
 def abstract_train_state(cfg, run: RunConfig, mesh):
@@ -187,6 +190,7 @@ def main() -> int:
     ap.add_argument("--out", default=RESULTS_DIR)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+    configure_logging("info", stream=sys.stdout)  # CLI progress on stdout
     os.makedirs(args.out, exist_ok=True)
 
     meshes = {"single": [False], "pod": [True], "both": [False, True]}[args.mesh]
@@ -198,20 +202,21 @@ def main() -> int:
             tag = f"{args.arch}_{args.shape}_{'pod' if mp else 'single'}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path) and not args.force:
-                print(f"[skip] {tag}")
+                log.info("[skip] %s", tag)
                 continue
             try:
                 row = run_cell(args.arch, args.shape, mp)
                 with open(path, "w") as f:
                     json.dump(row, f, indent=1)
                 r = row["roofline"]
-                print(f"[ok] {tag}: compile={row['t_compile_s']}s "
-                      f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+                log.info("[ok] %s: compile=%ss dom=%s frac=%.3f", tag,
+                         row["t_compile_s"], r["dominant"],
+                         r["roofline_fraction"])
             except Exception:
                 ok = False
                 with open(os.path.join(args.out, tag + ".FAIL"), "w") as f:
                     f.write(traceback.format_exc())
-                print(f"[FAIL] {tag}", file=sys.stderr)
+                log.error("[FAIL] %s", tag)
                 traceback.print_exc()
         return 0 if ok else 1
 
@@ -222,16 +227,16 @@ def main() -> int:
             tag = f"{arch}_{shape}_{'pod' if mp else 'single'}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path) and not args.force:
-                print(f"[skip] {tag}")
+                log.info("[skip] %s", tag)
                 continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", arch, "--shape", shape,
                    "--mesh", "pod" if mp else "single", "--out", args.out]
-            print(f"[run] {tag}", flush=True)
+            log.info("[run] %s", tag)
             r = subprocess.run(cmd)
             if r.returncode != 0:
                 failures.append(tag)
-    print(f"done; {len(failures)} failures: {failures}")
+    log.info("done; %d failures: %s", len(failures), failures)
     return 1 if failures else 0
 
 

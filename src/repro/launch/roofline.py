@@ -144,6 +144,28 @@ class Roofline:
         }
 
 
+def kernel_roofline(flops: float, nbytes: float, wall_s: float) -> dict:
+    """Single-kernel roofline terms from host-side launch accounting.
+
+    ``flops``/``nbytes`` are the launch path's analytic estimates (see
+    ``obs/kerneltel.py`` per-site models), ``wall_s`` the measured
+    launch-to-host-sync wall. ``roofline_fraction`` is the fraction of
+    the roofline-implied minimum time actually achieved —
+    ``max(t_compute, t_memory) / wall`` against the v5e-class constants
+    above — the per-kernel score ``benchmarks/table10_observability.py``
+    publishes so efficiency regressions are visible in CI.
+    """
+    t_compute = flops / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_min = max(t_compute, t_memory)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "dominant": "compute" if t_compute >= t_memory else "memory",
+        "roofline_fraction": (t_min / wall_s) if wall_s > 0 else 0.0,
+    }
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for a
     forward-only step (+ attention term for long contexts)."""

@@ -12,8 +12,11 @@ import jax
 
 from repro.configs.base import RunConfig, get_config, get_smoke_config
 from repro.models import build
+from repro.obs.log import configure as configure_logging, get_logger
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.scheduler import Scheduler
+
+log = get_logger("launch.serve")
 
 
 def main() -> int:
@@ -27,9 +30,11 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    configure_logging("info", stream=sys.stdout)  # CLI progress on stdout
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     bundle = build(cfg)
-    print(f"initializing {cfg.name} ({cfg.param_count() / 1e9:.2f}B params)...")
+    log.info("initializing %s (%.2fB params)...", cfg.name,
+             cfg.param_count() / 1e9)
     params = bundle.init(jax.random.key(args.seed))
     engine = ServeEngine(cfg, params,
                          ServeConfig(max_new_tokens=args.max_new,
@@ -45,9 +50,9 @@ def main() -> int:
     stats = sched.run_until_drained()
     wall = time.time() - t0
     tput = engine.stats["decode_tokens"] / max(wall, 1e-9)
-    print(f"{stats['n_done']} requests in {wall:.1f}s "
-          f"({tput:.1f} tok/s decode); p50 {stats['p50_latency_s']:.2f}s "
-          f"p99 {stats['p99_latency_s']:.2f}s")
+    log.info("%d requests in %.1fs (%.1f tok/s decode); p50 %.2fs p99 %.2fs",
+             stats["n_done"], wall, tput, stats["p50_latency_s"],
+             stats["p99_latency_s"])
     return 0
 
 

@@ -30,7 +30,10 @@ import jax
 
 from repro.configs.base import RunConfig, get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.obs.log import configure as configure_logging, get_logger
 from repro.train.train_loop import Trainer, TrainerConfig
+
+logger = get_logger("launch.train")
 
 
 def main() -> int:
@@ -50,6 +53,7 @@ def main() -> int:
                     help="reduced config (CPU-sized)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    configure_logging("info", stream=sys.stdout)  # CLI progress on stdout
 
     if jax.device_count() > 1 and os.environ.get("REPRO_DISTRIBUTED"):
         jax.distributed.initialize()
@@ -75,16 +79,16 @@ def main() -> int:
 
     def log(step, m):
         if step % max(args.steps // 10, 1) == 0 or step == 1:
-            print(f"step {step:5d} loss {m['loss']:.4f} "
-                  f"gnorm {m['grad_norm']:.3f} {m['step_time']:.2f}s",
-                  flush=True)
+            logger.info("step %5d loss %.4f gnorm %.3f %.2fs", step,
+                        m["loss"], m["grad_norm"], m["step_time"])
         verdicts = trainer.monitor.evaluate()
         slow = [h for h, v in verdicts.items() if v != "ok"]
         if slow:
-            print(f"[straggler] {slow}", flush=True)
+            logger.warning("[straggler] %s", slow)
 
     hist = trainer.run_loop(iter(pipe), hook=log)
-    print(f"done: {len(hist)} steps, final loss {hist[-1]['loss']:.4f}")
+    logger.info("done: %d steps, final loss %.4f", len(hist),
+                hist[-1]["loss"])
     return 0
 
 

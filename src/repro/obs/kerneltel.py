@@ -1,0 +1,106 @@
+"""Kernel launch telemetry: wall time + bytes/FLOP roofline accounting.
+
+The hot paths are one kernel family — ``batched_select`` (the fused
+superlog scan, serial and stacked), ``shard_route`` (key->shard
+hashing), ``delta_codec`` (on-disk chain pack/unpack) — and each has a
+single host-facing point where the launch is forced to a host sync.
+Those sites wrap themselves in ``launch(name, nbytes=..., flops=...)``:
+the context manager times launch-to-sync wall and aggregates per-kernel
+``calls / wall_s / bytes / flops`` here, publishing mirrors into the
+process-wide registry (``kernel.<name>.calls`` etc.).
+
+Bytes/FLOP figures are *analytic estimates* of the kernel's traffic and
+arithmetic (documented at each call site), not HLO measurements — they
+are the numerator of the roofline model in ``launch/roofline.py``:
+``snapshot()`` derives each kernel's achieved GB/s, GFLOP/s, and
+``roofline_fraction`` (roofline-implied minimum time / achieved wall,
+against the v5e-class constants), which
+``benchmarks/table10_observability.py`` writes into
+``BENCH_results.json`` so kernel efficiency regressions gate CI.
+
+Overhead per launch is two ``perf_counter`` reads and one locked dict
+update (~1 microsecond) — negligible against any real kernel launch,
+and bounded: state is one small dict per kernel name.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.launch.roofline import kernel_roofline
+
+from .metrics import REGISTRY
+
+
+class KernelTelemetry:
+    """Per-kernel launch aggregation (see module docstring)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        # name -> [calls, wall_s, bytes, flops]
+        self._k: dict[str, list[float]] = {}
+
+    def record(self, name: str, wall_s: float, nbytes: float,
+               flops: float) -> None:
+        with self._lock:
+            row = self._k.get(name)
+            if row is None:
+                row = self._k[name] = [0, 0.0, 0.0, 0.0]
+            row[0] += 1
+            row[1] += wall_s
+            row[2] += nbytes
+            row[3] += flops
+        REGISTRY.counter(f"kernel.{name}.calls").inc()
+        REGISTRY.counter(f"kernel.{name}.wall_s").inc(wall_s)
+        REGISTRY.counter(f"kernel.{name}.bytes").inc(nbytes)
+        REGISTRY.counter(f"kernel.{name}.flops").inc(flops)
+
+    def launch(self, name: str, *, nbytes: float, flops: float) -> "_Launch":
+        """Context manager timing one launch-to-host-sync region."""
+        return _Launch(self, name, nbytes, flops)
+
+    def snapshot(self) -> dict:
+        """Per-kernel aggregates + derived roofline terms."""
+        with self._lock:
+            rows = {n: list(r) for n, r in self._k.items()}
+        out = {}
+        for name, (calls, wall, nb, fl) in rows.items():
+            d = {"calls": int(calls), "wall_s": wall, "bytes": nb,
+                 "flops": fl,
+                 "us_per_call": (wall / calls * 1e6) if calls else 0.0,
+                 "gbytes_per_s": (nb / wall / 1e9) if wall else 0.0,
+                 "gflops_per_s": (fl / wall / 1e9) if wall else 0.0}
+            d.update(kernel_roofline(fl, nb, wall))
+            out[name] = d
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._k.clear()
+
+
+class _Launch:
+    __slots__ = ("_tel", "_name", "_nbytes", "_flops", "_t0")
+
+    def __init__(self, tel, name, nbytes, flops):
+        self._tel, self._name = tel, name
+        self._nbytes, self._flops = float(nbytes), float(flops)
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self._tel.record(self._name, time.perf_counter() - self._t0,
+                             self._nbytes, self._flops)
+        return False
+
+
+#: the process-wide kernel telemetry the launch sites publish into.
+KERNELS = KernelTelemetry()
+
+
+def launch(name: str, *, nbytes: float, flops: float) -> _Launch:
+    """``KERNELS.launch`` shorthand for the instrumented call sites."""
+    return KERNELS.launch(name, nbytes=nbytes, flops=flops)

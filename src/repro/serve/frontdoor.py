@@ -58,10 +58,18 @@ cooperative-cancellation token, so a wave whose every request was
 cancelled or shed aborts between stages instead of paying for device work
 (``core.store.OperationCancelled``).
 
-**Observability.** Every request carries a trace; per-stage wall times
-(queue, batch-form, scan, gather, materialize, exec, total) aggregate
-into bounded histograms surfaced as p50/p99 by ``stats()``, which
-``benchmarks/table9_serving.py`` writes into ``BENCH_results.json``.
+**Observability.** Every admitted request is minted a ``trace_id``
+(``repro.obs.trace.new_trace_id``) at submit; the wave it dispatches in
+runs inside a ``span()`` carrying that id, so stage timings and failure
+events all the way down to segment I/O land in the flight recorder
+under the request's trace. Per-stage wall times (queue, batch-form,
+scan, gather, materialize, exec, total) aggregate into bounded
+``repro.obs`` histograms — owned by a per-door ``MetricsRegistry`` so
+two doors in one process never alias — surfaced as p50/p99 by
+``stats()``, which ``benchmarks/table9_serving.py`` writes into
+``BENCH_results.json``. Rejections (queue-full, pressure, deadline) are
+counted per tenant and recorded as ``admission_reject`` flight-recorder
+events.
 
 Determinism for tests: with an injected ``clock`` and a caller-driven
 ``pump()`` (no background thread), scheduling is a pure function of the
@@ -78,7 +86,9 @@ from collections import defaultdict
 from concurrent.futures import Future
 from typing import Callable, Mapping, Sequence
 
-import numpy as np
+from repro.obs import RECORDER
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import new_trace_id, span
 
 from .gestore_service import GeStoreService, VersionRequest
 
@@ -135,33 +145,6 @@ class FrontDoorConfig:
     hist_cap: int = 8192
 
 
-class _Hist:
-    """Bounded latency histogram: a ring of the last ``cap`` samples
-    (seconds), snapshotting to p50/p99 milliseconds."""
-
-    def __init__(self, cap: int):
-        self._cap = cap
-        self._buf: list[float] = []
-        self._i = 0
-        self.n = 0
-
-    def record(self, seconds: float) -> None:
-        self.n += 1
-        if len(self._buf) < self._cap:
-            self._buf.append(seconds)
-        else:
-            self._buf[self._i] = seconds
-            self._i = (self._i + 1) % self._cap
-
-    def snapshot(self) -> dict:
-        if not self._buf:
-            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0}
-        a = np.asarray(self._buf)
-        return {"n": self.n,
-                "p50_ms": float(np.percentile(a, 50) * 1e3),
-                "p99_ms": float(np.percentile(a, 99) * 1e3)}
-
-
 @dataclasses.dataclass
 class Ticket:
     """One admitted request: queue entry + trace context + future."""
@@ -177,6 +160,7 @@ class Ticket:
     payload: dict | None = None          # mutations only
     wave: int = -1                       # dispatch wave index
     rider: bool = False                  # batched into another's wave
+    trace_id: str = ""                   # minted at admission
 
     def sort_key(self) -> tuple:
         return (-self.priority,
@@ -227,8 +211,14 @@ class FrontDoor:
         self._dispatch_lock = threading.Lock()
         self._thread: threading.Thread | None = None
         self._stopping = False
-        self._hists = {s: _Hist(self.config.hist_cap) for s in STAGES}
-        self._tenant_hist: dict[str, _Hist] = {}
+        #: per-door registry: two doors in one process must not alias
+        #: latency histograms (stats()["latency"]["total"]["n"] counts
+        #: THIS door's requests only)
+        self.metrics = MetricsRegistry()
+        self._hists = {s: self.metrics.histogram(f"latency.{s}",
+                                                 self.config.hist_cap)
+                       for s in STAGES}
+        self._tenant_hist: dict[str, Histogram] = {}
         self.counters = {
             "admitted": 0, "completed": 0, "failed": 0, "cancelled": 0,
             "rejected_queue_full": 0, "rejected_pressure": 0,
@@ -237,7 +227,8 @@ class FrontDoor:
         }
         self.per_tenant: dict[str, dict] = defaultdict(
             lambda: {"admitted": 0, "completed": 0, "failed": 0,
-                     "shed_deadline": 0})
+                     "shed_deadline": 0, "rejected_queue_full": 0,
+                     "rejected_pressure": 0})
         #: dispatch journal (one dict per wave) — the fairness/priority
         #: tests audit it; bounded by hist_cap like the histograms
         self.dispatch_log: list[dict] = []
@@ -271,6 +262,10 @@ class FrontDoor:
         if self.service.pool_pressure() >= self.config.shed_pressure:
             with self._lock:
                 self.counters["rejected_pressure"] += 1
+                self.per_tenant[tenant]["rejected_pressure"] += 1
+            RECORDER.record("admission_reject", reason="pressure",
+                            tenant=tenant, store=store,
+                            pressure=self.service.pool_pressure())
             raise Overloaded(
                 f"pool pressure {self.service.pool_pressure():.2f} >= "
                 f"shed_pressure {self.config.shed_pressure}")
@@ -322,9 +317,13 @@ class FrontDoor:
             if q is None:
                 q = self._queues[tenant] = []
                 self._rr.append(tenant)
-                self._tenant_hist[tenant] = _Hist(cfg.hist_cap)
+                self._tenant_hist[tenant] = self.metrics.histogram(
+                    f"tenant.{tenant}", cfg.hist_cap)
             if len(q) >= cfg.max_queue_per_tenant:
                 self.counters["rejected_queue_full"] += 1
+                self.per_tenant[tenant]["rejected_queue_full"] += 1
+                RECORDER.record("admission_reject", reason="queue_full",
+                                tenant=tenant, store=store, queued=len(q))
                 raise QueueFull(
                     f"tenant {tenant!r}: {len(q)} queued >= "
                     f"max_queue_per_tenant {cfg.max_queue_per_tenant}")
@@ -333,7 +332,8 @@ class FrontDoor:
                        priority=(cfg.default_priority if priority is None
                                  else int(priority)),
                        deadline=None if timeout is None else now + timeout,
-                       future=fut, t_submit=now, req=req, payload=payload)
+                       future=fut, t_submit=now, req=req, payload=payload,
+                       trace_id=new_trace_id("req"))
             bisect.insort(q, t, key=Ticket.sort_key)
             self.counters["admitted"] += 1
             self.per_tenant[tenant]["admitted"] += 1
@@ -344,6 +344,8 @@ class FrontDoor:
     def _shed(self, t: Ticket) -> None:
         self.counters["shed_deadline"] += 1
         self.per_tenant[t.tenant]["shed_deadline"] += 1
+        RECORDER.record("admission_reject", reason="deadline",
+                        tenant=t.tenant, store=t.store, trace=t.trace_id)
         if t.future.set_running_or_notify_cancel():
             t.future.set_exception(DeadlineExceeded(
                 f"deadline passed before dispatch (tenant {t.tenant!r}, "
@@ -421,6 +423,7 @@ class FrontDoor:
             "members": [t.seq for t in wave],
             "riders": [t.seq for t in wave if t.rider],
             "degraded": degraded, "pressure": self.service.pool_pressure(),
+            "trace": head.trace_id,
         })
         del self.dispatch_log[:-cfg.hist_cap]
         return wave
@@ -448,26 +451,36 @@ class FrontDoor:
             return all(f.cancelled() for f in futs)
 
         items = [(t.req, t.future) for t in wave]
+        head = wave[0]
         trace: dict[str, float] = {}
         t0 = time.perf_counter()
-        self.service.serve_wave(items, cancel=cancelled, trace=trace)
+        # the wave runs under the initiator's trace id: stage timings and
+        # any segment-read failure below land on this span in the recorder
+        with span("read_wave", trace_id=head.trace_id, wave=head.wave,
+                  tenant=head.tenant, store=head.store, members=len(wave)):
+            self.service.serve_wave(items, cancel=cancelled, trace=trace)
         self._finish(wave, trace, time.perf_counter() - t0)
 
     def _execute_mutation(self, t: Ticket) -> None:
         t0 = time.perf_counter()
         if t.future.set_running_or_notify_cancel():
             try:
-                store = self.service.store(t.store)
-                p = dict(t.payload)
-                if t.kind == "update":
-                    out = store.update(p.pop("ts"), p.pop("keys"),
-                                       p.pop("table"), **p)
-                elif t.kind == "delete":
-                    out = store.delete(p.pop("ts"), p.pop("keys"), **p)
-                else:   # compact
-                    out = store.compact(p.pop("before_ts"), **p)
+                with span("mutation", trace_id=t.trace_id, op=t.kind,
+                          tenant=t.tenant, store=t.store):
+                    store = self.service.store(t.store)
+                    p = dict(t.payload)
+                    if t.kind == "update":
+                        out = store.update(p.pop("ts"), p.pop("keys"),
+                                           p.pop("table"), **p)
+                    elif t.kind == "delete":
+                        out = store.delete(p.pop("ts"), p.pop("keys"), **p)
+                    else:   # compact
+                        out = store.compact(p.pop("before_ts"), **p)
                 t.future.set_result(out)
             except Exception as e:  # noqa: BLE001 — delivered via future
+                RECORDER.record("mutation_error", store=t.store,
+                                op=t.kind, tenant=t.tenant,
+                                trace=t.trace_id, error=repr(e))
                 t.future.set_exception(e)
         self.service.enforce_pool()   # mutations grow stores: honor budget
         self._finish([t], {}, time.perf_counter() - t0)

@@ -35,6 +35,7 @@ from concurrent.futures import Future
 from typing import Iterator, Mapping, Sequence
 
 from repro.core.store import VersionedStore, VersionView
+from repro.obs import RECORDER, REGISTRY
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +166,8 @@ class TieredStorePool:
             self._stores[name] = st
             self.stats["reloads"] += 1
             self._thrash += 1.0
+            REGISTRY.counter("pool.reloads").inc()
+            RECORDER.record("pool_reload", store=name, path=path)
         elif name in self._spilled:
             # someone else (e.g. GeStore.open_store) reloaded it into the
             # shared dict first; adopt it and keep the epoch guarantee
@@ -265,6 +268,7 @@ class TieredStorePool:
             if st.has_device_state():               # tier 1: device -> host
                 st.drop_superlog()
                 self.stats["demotions"] += 1
+                REGISTRY.counter("pool.demotions").inc()
                 n += 1
                 recount(name, st)
                 if total <= self.budget_bytes:
@@ -277,6 +281,9 @@ class TieredStorePool:
                        and st.spill_shard(root=path) is not None):
                     self.stats["shard_spills"] += 1
                     self._thrash += 1.0
+                    REGISTRY.counter("pool.shard_spills").inc()
+                    RECORDER.record("pool_shard_spill", store=name,
+                                    path=path)
                     n += 1
                     recount(name, st)
                 if st.resident_shard_ids():
@@ -292,6 +299,8 @@ class TieredStorePool:
             total -= per_store.pop(name, 0)
             self.stats["spills"] += 1
             self._thrash += 1.0
+            REGISTRY.counter("pool.spills").inc()
+            RECORDER.record("pool_spill", store=name, path=path)
             n += 1
         return n
 
@@ -494,6 +503,9 @@ class GeStoreService:
                 while len(plan) > self.max_views_per_plan:
                     plan.popitem(last=False)
             except Exception as e:
+                REGISTRY.counter("service.wave_errors").inc()
+                RECORDER.record("wave_error", store=store_name,
+                                error=repr(e), requests=len(items))
                 for _, fut in items:
                     if not fut.done() and fut.set_running_or_notify_cancel():
                         fut.set_exception(e)

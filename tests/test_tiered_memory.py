@@ -213,6 +213,9 @@ def test_chaos_wave_fails_only_affected_group(rng, tmp_path, chaos, exc):
                          spill_root=str(tmp_path))
     assert svc.pool.enforce() >= 2        # both stores fully on disk
 
+    from repro.obs import RECORDER
+    RECORDER.clear()                      # isolate this test's events
+
     chaos["target"], chaos["exc"] = "A", exc
     items = [(VersionRequest("A", 20, ("a",)), Future()),
              (VersionRequest("B", 20, ("a",)), Future())]
@@ -220,6 +223,17 @@ def test_chaos_wave_fails_only_affected_group(rng, tmp_path, chaos, exc):
     with pytest.raises(type(exc)):
         items[0][1].result(0)
     assert chaos["hits"] >= 1
+
+    # the injected failure is reconstructable from the flight recorder:
+    # the segment-read error (with the segment path) AND the wave-level
+    # failure (store + error + blast radius) are both in the dump
+    dump = RECORDER.dump()
+    seg_errs = [e for e in dump["events"] if e["kind"] == "segment_read_error"]
+    assert seg_errs and "injected" in seg_errs[0]["error"]
+    assert store_dir_name("A") in seg_errs[0]["root"]
+    wave_errs = [e for e in dump["events"] if e["kind"] == "wave_error"]
+    assert wave_errs and wave_errs[0]["store"] == "A"
+    assert "injected" in wave_errs[0]["error"]
     got_b = items[1][1].result(0)         # other group served in-wave
     assert np.array_equal(got_b.values["a"], want_b.values["a"])
     assert "A" in svc.pool                # consistent: still addressable
@@ -241,12 +255,29 @@ def test_chaos_frontdoor_keeps_serving_other_tenants(rng, tmp_path, chaos):
     fd = FrontDoor(stores, memory_budget_bytes=1, spill_root=str(tmp_path))
     assert fd.service.pool.enforce() >= 2
 
+    from repro.obs import RECORDER
+    RECORDER.clear()
+
     chaos["target"] = "A"
     doomed = fd.submit("tenant-a", "A", 30)
     fine = fd.submit("tenant-b", "B", 30)
     fd.pump()
     with pytest.raises(CorruptSegmentError):
         doomed.result(0)
+
+    # end-to-end trace: the segment failure carries the trace id minted
+    # for tenant-a's request at submit (the wave span propagated it), so
+    # the dump alone answers "whose request died, and where"
+    events = RECORDER.dump()["events"]
+    seg_errs = [e for e in events if e["kind"] == "segment_read_error"]
+    assert seg_errs and seg_errs[0].get("trace", "").startswith("req-")
+    wave_errs = [e for e in events if e["kind"] == "wave_error"]
+    assert wave_errs and wave_errs[0]["store"] == "A"
+    assert wave_errs[0]["trace"] == seg_errs[0]["trace"]
+    doomed_spans = [e for e in events if e["kind"] == "span"
+                    and e["name"] == "read_wave"
+                    and e["trace"] == seg_errs[0]["trace"]]
+    assert doomed_spans and doomed_spans[0]["tenant"] == "tenant-a"
     assert len(fine.result(0).keys) == 120
     s = fd.stats()
     assert s["counters"]["failed"] == 1

@@ -37,6 +37,11 @@ BASELINE = os.path.join(_ROOT, "benchmarks", "baseline.json")
 #: default allowed slowdown factor: fresh_us <= tol * baseline_us passes
 DEFAULT_TOLERANCE = 2.5
 
+#: built-in per-table overrides (CLI --table-tolerance wins): table9's
+#: end-to-end serving rows and table10's sub-millisecond instrumentation
+#: probes are the noisiest metrics in the suite on shared runners
+DEFAULT_TABLE_TOLERANCES = {"table9": 5.0, "table10": 5.0}
+
 
 def _table_of(name: str) -> str:
     """'table7.get_versions_s2_q32' -> 'table7' (run.py's table key)."""
@@ -109,7 +114,7 @@ def main(argv=None) -> int:
                     "(merging per table, like run.py) instead of comparing")
     args = ap.parse_args(argv)
 
-    table_tol = {}
+    table_tol = dict(DEFAULT_TABLE_TOLERANCES)
     for spec in args.table_tolerance:
         table, _, tol = spec.partition("=")
         try:
