@@ -65,11 +65,11 @@ def main() -> None:
                             table2_incremental, table3_split,
                             table4_application, table5_batched,
                             table6_storage, table7_sharding, table9_serving,
-                            table10_observability)
+                            table10_observability, table11_kernels)
     mods = [table1_lifecycle, table2_incremental, table3_split,
             table4_application, table5_batched, table6_storage,
             table7_sharding, table9_serving, table10_observability,
-            fig1_growth, roofline_table]
+            table11_kernels, fig1_growth, roofline_table]
     only = {w.strip() for w in os.environ.get("BENCH_TABLES", "").split(",")
             if w.strip()}
     if only:

@@ -38,6 +38,9 @@ from ._util import synth_release, timeit
 N = int(os.environ.get("BENCH_OBS_N",
                        os.environ.get("BENCH_BATCH_N", 8_000)))
 PROBE_REPS = 10_000
+# roofline rows sample SEVERAL warm launches (calls > 1), so a single
+# stray compile can't dominate the per-call wall numbers
+ROOFLINE_REPS = int(os.environ.get("BENCH_OBS_REPS", 5))
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 METRICS_OUT = os.path.join(_ROOT, "BENCH_metrics.json")
 
@@ -78,9 +81,9 @@ def _probe_rows() -> list[tuple[str, float, str]]:
     return rows
 
 
-def _drive_kernels() -> None:
-    """Exercise every instrumented launch site at bench scale."""
-    # batched_select: one 4-release store, a 32-version fused batch
+def _build_state():
+    """Build the bench state ONCE, outside the sampled region — store
+    construction (ingest) must not ride along in the roofline rows."""
     st = VersionedStore("obs", [FieldSchema("sequence", 16, "int32"),
                                 FieldSchema("length", 1, "int32")],
                         capacity=N + N // 4)
@@ -91,25 +94,32 @@ def _drive_kernels() -> None:
                             seed=v + 7)
         st.update((v + 1) * 10, *rel)
     ts_list = [((i % 4) + 1) * 10 for i in range(32)]
-    st.get_versions(ts_list, fields=["sequence"])
-
-    # shard_route: hash the whole keyspace across 8 shards
     keys = [f"P{i:08d}".encode() for i in range(N)]
-    route_keys(keys, 8)
-
-    # delta_codec: pack + unpack one (row, ts)-sorted chain run
     rng = np.random.default_rng(11)
     rows = np.sort(rng.integers(0, max(N // 4, 1), size=N)).astype(np.int64)
     vals = rng.integers(0, 100, size=(N, 16)).astype(np.int32)
-    packed, meta = chain_pack(vals, rows)
-    chain_unpack(packed, rows, meta, np.dtype(np.int32))
+    return st, ts_list, keys, rows, vals
+
+
+def _drive_kernels(state, reps: int = 1) -> None:
+    """Exercise every instrumented launch site at bench scale."""
+    st, ts_list, keys, rows, vals = state
+    for _ in range(reps):
+        # batched_select: a 32-version fused batch over the 4-release store
+        st.get_versions(ts_list, fields=["sequence"])
+        # shard_route: hash the whole keyspace across 8 shards
+        route_keys(keys, 8)
+        # delta_codec: pack + unpack one (row, ts)-sorted chain run
+        packed, meta = chain_pack(vals, rows)
+        chain_unpack(packed, rows, meta, np.dtype(np.int32))
 
 
 def run() -> list[tuple[str, float, str]]:
     rows = _probe_rows()
-    _drive_kernels()         # warmup: compile/trace cost stays out of the
+    state = _build_state()
+    _drive_kernels(state)    # warmup: compile/trace cost stays out of the
     KERNELS.clear()          # telemetry attributed to the timed drive
-    _drive_kernels()
+    _drive_kernels(state, reps=ROOFLINE_REPS)   # warm steady-state sample
     snap = KERNELS.snapshot()
     for kernel in ("batched_select", "shard_route", "delta_codec"):
         k = snap.get(kernel)

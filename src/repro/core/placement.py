@@ -49,7 +49,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.batched_select import stacked_boundary_select
+from repro.kernels import launch as klaunch
+from repro.kernels.batched_select import scan_bucket, stacked_boundary_select
 from repro.launch.mesh import make_shard_mesh
 from repro.obs import kerneltel
 
@@ -134,10 +135,14 @@ class PlacedSuperLog:
         # callers pass their CURRENT superlog list and never retain ours
         self._fused: dict[str, tuple] = {}
         s = len(superlogs)
-        cmax = max((sl.n_cells for sl in superlogs), default=0)
-        bmax = max(self.b_widths, default=0)
-        ts = np.full((s, max(cmax, 1)), np.iinfo(np.int32).max, np.int32)
-        bnd = np.zeros((s, max(bmax, 1)), np.int32)
+        # bucket the stacked cell/boundary axes to powers of two (same
+        # trick as the per-store superlog): mid-run epoch rolls under
+        # continuous ingest then reuse the compiled stacked scan instead
+        # of retracing every time any shard's cell count moves
+        cmax = scan_bucket(max((sl.n_cells for sl in superlogs), default=0))
+        bmax = klaunch.pow2_bucket(max(self.b_widths, default=0), floor=8)
+        ts = np.full((s, cmax), np.iinfo(np.int32).max, np.int32)
+        bnd = np.zeros((s, bmax), np.int32)
         for i, sl in enumerate(superlogs):
             if sl.ts_host is not None:
                 ts[i, : sl.n_cells] = sl.ts_host
@@ -159,18 +164,26 @@ class PlacedSuperLog:
         if self.n_cells == 0 or not len(qs):
             return [np.zeros((len(qs), w), np.int32) for w in self.b_widths]
         q = len(qs)
+        # bucket the query axis too (repeat the last query; extra columns
+        # are sliced off) so wave-width churn cannot retrace the scan
+        q_pad = klaunch.pow2_bucket(q, floor=8)
+        qs_in = qs if q_pad == q else np.concatenate(
+            [qs, np.full(q_pad - q, qs[-1], np.int32)])
         s, cmax = self._ts.shape
         bmax = self._bnd.shape[1]
-        # stacked traffic model (padded shapes are what actually move):
-        # read the (S, Cmax) ts stack, write the per-shard (Q, Cmax)
-        # cumsums, read+write the (S, Q, Bmax) boundary selections
+        # stacked traffic model: logical counts the real per-shard cells
+        # and boundaries; padded counts the bucketed (S, Cmax)/(S, Q, Bmax)
+        # stacked shapes that actually move
+        b_sum = sum(self.b_widths)
         with kerneltel.launch("batched_select",
-                              nbytes=4 * (s * cmax + s * q * cmax
-                                          + 2 * s * q * bmax),
-                              flops=2 * s * q * cmax):
+                              nbytes=4 * (self.n_cells + q * self.n_cells
+                                          + 2 * q * b_sum),
+                              flops=2 * q * self.n_cells,
+                              padded_nbytes=4 * (s * cmax + s * q_pad * cmax
+                                                 + 2 * s * q_pad * bmax)):
             out = np.asarray(stacked_boundary_select(
-                self._ts, jnp.asarray(qs), self._bnd, mesh=self.mesh))
-        return [out[i, :, : w] for i, w in enumerate(self.b_widths)]
+                self._ts, jnp.asarray(qs_in), self._bnd, mesh=self.mesh))
+        return [out[i, :q, : w] for i, w in enumerate(self.b_widths)]
 
     # -- fused cross-shard value gathers --------------------------------------
     def _fused_field(self, name: str, superlogs) -> tuple:

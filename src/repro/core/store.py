@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import re
 from typing import Callable, Mapping, Sequence
 
@@ -354,7 +355,15 @@ class _CellLog:
 
 @dataclasses.dataclass
 class _SuperLogField:
-    """One log's slice of the fused superlog."""
+    """One log's slice of the fused superlog.
+
+    When ``packed_host`` is set the field stays *delta-packed on device*:
+    cells are stored as narrowed chain deltas (first cell of every row
+    chain raw, flagged by ``heads_host``) and the gather path decodes them
+    in-kernel via a segmented scan (kernels/delta_codec.chain_decode) —
+    device bytes and cold-reload upload traffic shrink by the narrowing
+    factor while gathers stay a single fused device op. ``vals_host``
+    remains the decoded host copy (placement and host paths read it)."""
     offset: int                 # first cell of this log in the fused ts array
     b_off: int                  # first entry of this log in the fused boundary array
     n_cells: int
@@ -363,7 +372,15 @@ class _SuperLogField:
     ptr: np.ndarray             # (N+1,) log-local CSR offsets (host)
     vals_host: np.ndarray | None  # (C_f, W) consolidated cell values
     device: object = None       # upload target (None = default device)
+    packed_host: np.ndarray | None = None  # narrowed chain deltas
+    heads_host: np.ndarray | None = None   # (C_f,) chain-head flags
     _vals_dev: object = None
+    _packed_dev: object = None
+    _heads_dev: object = None
+
+    def _put(self, arr):
+        return (jnp.asarray(arr) if self.device is None
+                else jax.device_put(arr, self.device))
 
     def vals_dev(self):
         """Device copy of the cell values, uploaded on first gather — a
@@ -371,11 +388,59 @@ class _SuperLogField:
         With a pinned ``device`` (shard->device placement) the upload
         lands there, so per-shard gathers run one shard per device."""
         if self._vals_dev is None and self.vals_host is not None:
-            self._vals_dev = (jnp.asarray(self.vals_host)
-                              if self.device is None
-                              else jax.device_put(self.vals_host,
-                                                  self.device))
+            self._vals_dev = self._put(self.vals_host)
         return self._vals_dev
+
+    def take_cells(self, idx):
+        """ONE fused device gather of cell values at field-local cell
+        indices. Delta-packed fields decode on device first (segmented
+        scan over the narrowed deltas), so the wide decoded array exists
+        only transiently inside the launch — HBM holds the packed copy."""
+        idx = jnp.asarray(idx)
+        if self.packed_host is None:
+            return jnp.take(self.vals_dev(), idx, axis=0)
+        if self._packed_dev is None:
+            self._packed_dev = self._put(self.packed_host)
+            self._heads_dev = self._put(self.heads_host)
+        decoded = kops.chain_decode(self._packed_dev, self._heads_dev)
+        # int32 scan truncated to the stored dtype == the host depth-loop
+        return jnp.take(decoded.astype(self.dtype), idx, axis=0)
+
+    def dev_nbytes(self) -> int:
+        n = 0
+        for a in (self._vals_dev, self._packed_dev, self._heads_dev):
+            if a is not None:
+                n += int(a.nbytes)
+        return n
+
+
+def _pack_field(vals: np.ndarray, ptr: np.ndarray):
+    """Chain-delta pack one field's consolidated cells for device residency.
+
+    Same chain format as the on-disk segments (kernels/delta_codec): first
+    cell of every row chain raw, later cells as wraparound deltas vs their
+    predecessor, narrowed when the whole run fits a smaller int. Returns
+    (packed, heads) when narrowing actually shrinks device bytes, else
+    (None, None) — floats, int8, and incompressible runs stay unpacked.
+    Disable globally with ``GESTORE_PACKED_SUPERLOG=0``."""
+    dt = vals.dtype
+    if not np.issubdtype(dt, np.integer) or not 2 <= dt.itemsize <= 4:
+        return None, None
+    heads = np.zeros(len(vals), bool)
+    heads[ptr[:-1][np.diff(ptr) > 0]] = True
+    prev = np.roll(vals, 1, axis=0)
+    prev[heads] = 0  # chain heads pack against zero (stored raw)
+    with np.errstate(over="ignore"):
+        delta = vals - prev
+    # min/max as Python ints: exact even at the int32 minimum
+    maxabs = (max(-int(delta.min()), int(delta.max())) if delta.size else 0)
+    narrow = np.dtype(kops.narrow_dtype(maxabs, base=dt))
+    if narrow.itemsize >= dt.itemsize:
+        return None, None
+    # heads ride along as one byte/cell; only pack when that still wins
+    if narrow.itemsize * vals.shape[1] + 1 >= dt.itemsize * vals.shape[1]:
+        return None, None
+    return delta.astype(narrow), heads
 
 
 class _SuperLog:
@@ -403,14 +468,18 @@ class _SuperLog:
         ts_parts: list[np.ndarray] = []
         bnd_parts: list[np.ndarray] = []
         self.fields: dict[str, _SuperLogField] = {}
+        pack_ok = os.environ.get("GESTORE_PACKED_SUPERLOG", "1") != "0"
         off = b_off = 0
         for name, log in logs.items():
             vals, tss, ptr = log.csr(self.n_rows)
             ptr = np.asarray(ptr)
-            self.fields[name] = _SuperLogField(
+            f = _SuperLogField(
                 offset=off, b_off=b_off, n_cells=len(tss), width=log.width,
                 dtype=log.dtype, ptr=ptr,
                 vals_host=vals if len(tss) else None, device=self.device)
+            if pack_ok and f.vals_host is not None and name != self.EXISTS:
+                f.packed_host, f.heads_host = _pack_field(vals, ptr)
+            self.fields[name] = f
             ts_parts.append(tss.astype(np.int32))
             bnd_parts.append(off + ptr.astype(np.int64))
             off += len(tss)
@@ -428,11 +497,23 @@ class _SuperLog:
     @property
     def ts(self):
         """Device copy of the fused ts array, uploaded on first use (to
-        the pinned ``device`` when shard placement set one)."""
+        the pinned ``device`` when shard placement set one) — padded to a
+        power-of-two cell bucket with int32 max (above every clamped
+        query, so padded cells never count). Bucketing happens HERE,
+        outside any jit boundary: successive ingests that grow the cell
+        count land in the same bucket and reuse the compiled scan instead
+        of retracing per epoch roll (the table9 serving-latency stall)."""
         if self._ts_dev is None and self.ts_host is not None:
-            self._ts_dev = (jnp.asarray(self.ts_host)
+            c = len(self.ts_host)
+            c_pad = kops.scan_bucket(c)
+            padded = self.ts_host
+            if c_pad != c:
+                padded = np.concatenate([
+                    padded,
+                    np.full(c_pad - c, np.iinfo(np.int32).max, np.int32)])
+            self._ts_dev = (jnp.asarray(padded)
                             if self.device is None
-                            else jax.device_put(self.ts_host, self.device))
+                            else jax.device_put(padded, self.device))
         return self._ts_dev
 
     # -- the one batched scan -------------------------------------------------
@@ -445,19 +526,35 @@ class _SuperLog:
         out = np.zeros((len(qs), len(self.boundaries)), np.int32)
         if self.n_cells and len(qs):
             q, c, b = len(qs), self.n_cells, len(self.boundaries)
+            # bucket the query and boundary axes like the cell axis (pow2,
+            # outside jit): continuous ingest + varying wave widths then
+            # revisit a handful of static shapes, so the scan AND the eager
+            # boundary take/where below stop recompiling per epoch roll
+            q_pad = kops.launch.pow2_bucket(q, floor=8)
+            b_pad = kops.launch.pow2_bucket(b, floor=8)
+            qs_in = qs if q_pad == q else np.concatenate(
+                [qs, np.full(q_pad - q, qs[-1], np.int32)])
+            bnd = self.boundaries
+            if b_pad != b:  # zero-pad: boundary 0 reads count 0 below
+                bnd = np.concatenate([bnd, np.zeros(b_pad - b, np.int64)])
+            c_pad = kops.scan_bucket(c)
             # traffic model: read the fused ts once (C*4), write the
             # (Q, C) running cumsum, read+write the (Q, B) boundary
-            # columns; arithmetic: one compare + one add per (q, cell)
-            with kerneltel.launch("batched_select",
-                                  nbytes=4 * (c + q * c + 2 * q * b),
-                                  flops=2 * q * c):
-                cum = kops.batched_masked_cumsum(self.ts, jnp.asarray(qs))
+            # columns; arithmetic: one compare + one add per (q, cell).
+            # logical uses the real shapes, padded the bucketed ones
+            with kerneltel.launch(
+                    "batched_select",
+                    nbytes=4 * (c + q * c + 2 * q * b),
+                    flops=2 * q * c,
+                    padded_nbytes=4 * (c_pad + q_pad * c_pad
+                                       + 2 * q_pad * b_pad)):
+                cum = kops.batched_masked_cumsum(self.ts, jnp.asarray(qs_in))
                 at = jnp.take(cum,
-                              jnp.asarray(np.maximum(self.boundaries - 1, 0)),
+                              jnp.asarray(np.maximum(bnd - 1, 0)),
                               axis=1)
-                at = jnp.where(jnp.asarray(self.boundaries == 0)[None, :],
+                at = jnp.where(jnp.asarray(bnd == 0)[None, :],
                                0, at)
-                out = np.asarray(at)
+                out = np.asarray(at)[:q, :b]
         return out
 
     # -- per-field boundary math ----------------------------------------------
@@ -491,7 +588,7 @@ class _SuperLog:
         cat_cnt = np.concatenate([c[s] for c, s in zip(cnts, sels)])
         cat_rows = np.concatenate(sels)
         idx = np.clip(f.ptr[cat_rows] + cat_cnt - 1, 0, f.n_cells - 1)
-        dev = jnp.take(f.vals_dev(), jnp.asarray(idx), axis=0)
+        dev = f.take_cells(idx)  # decodes delta-packed fields on device
         return (dev, lens, cat_cnt)
 
     def gather_finalize(self, name: str, handle: tuple) -> list[np.ndarray]:
@@ -656,8 +753,7 @@ class VersionedStore:
             if sl._ts_dev is not None:  # lazy: reading .ts would upload
                 device += sl._ts_dev.nbytes
             for f in sl.fields.values():
-                if f._vals_dev is not None:
-                    device += f._vals_dev.nbytes
+                device += f.dev_nbytes()
         return {"host": host, "device": device}
 
     # -- head (latest-value) state, rebuilt lazily after load ----------------
@@ -1159,21 +1255,16 @@ class VersionedStore:
             if len(tss) == 0:
                 continue
             base_vals, base_found = log.select_at(self.n_rows, before_ts)
-            keep = tss > before_ts
-            rows_all = np.repeat(np.arange(self.n_rows, dtype=np.int32),
-                                 np.diff(ptr))
-            base_rows = np.nonzero(base_found)[0].astype(np.int32)
-            new_rows = np.concatenate([base_rows, rows_all[keep]])
-            new_tss = np.concatenate([
-                np.full(len(base_rows), before_ts, np.int64), tss[keep]])
-            new_vals = np.concatenate([base_vals[base_found], vals[keep]])
+            # the horizon mask + value rewrite run on device through the
+            # shared launch helper (numpy oracle on the CPU backend);
+            # byte-identical either way, pinned by the equivalence tests
+            new_vals, new_tss, new_rows, new_ptr = kops.compact_rewrite(
+                vals, tss, np.asarray(ptr), base_vals, base_found,
+                before_ts, self.n_rows)
             dropped += len(tss) - len(new_tss)
-            order = np.lexsort((new_tss, new_rows))
-            nptr = np.zeros(self.n_rows + 1, np.int32)
-            np.add.at(nptr, new_rows + 1, 1)
-            log._csr = (new_vals[order], new_tss[order], new_rows[order])
+            log._csr = (new_vals, new_tss, new_rows)
             log._chunks = []
-            log._row_ptr = np.cumsum(nptr).astype(np.int32)
+            log._row_ptr = new_ptr
             log._n_rows_at_build = self.n_rows
         # collapse the updates-table prefix into one synthetic base release
         kept = [v for v in self.versions if v.ts > before_ts]

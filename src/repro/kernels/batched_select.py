@@ -11,6 +11,14 @@ timestamp tile (already VMEM-resident across the inner query axis) and
 emits the intra-tile cumsum for one query. The tiny per-(query, tile)
 offset cumsum and the CSR boundary gathers run in XLA, exactly as in the
 single-query kernel.
+
+The ts tile is no longer hardcoded: ``launch.tile_for("batched_select")``
+resolves it (env override > autotuned winner > default), and callers are
+expected to pre-pad the cell axis to a :func:`scan_bucket` power-of-two
+bucket so a continuously growing superlog reuses a handful of compiled
+executables instead of retracing per ingest (core/store.py does this for
+the fused superlog; padding *inside* the jit boundary cannot help, the
+trace has already happened by then).
 """
 from __future__ import annotations
 
@@ -20,10 +28,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from . import ref
-from ._compat import cdiv, interpret_default
+from . import launch, ref
+from ._compat import interpret_default
 
-TILE_C = 2048
+#: kept as a module attr for backward compatibility (the pre-autotune
+#: hardcoded tile); live launches resolve through launch.tile_for.
+TILE_C = launch.DEFAULT_TILES["batched_select"]
+
+
+def scan_bucket(n: int) -> int:
+    """Power-of-two cell bucket for the fused scan, floored at the launch
+    tile so the bucketed length is always a whole number of tiles."""
+    return launch.pow2_bucket(n, floor=tile())
+
+
+def tile() -> int:
+    """The resolved scan tile (env > autotune cache > default)."""
+    return launch.tile_for("batched_select")
 
 
 def _batched_masked_cumsum_kernel(ts_ref, tq_ref, cum_ref, tot_ref):
@@ -34,12 +55,21 @@ def _batched_masked_cumsum_kernel(ts_ref, tq_ref, cum_ref, tot_ref):
     tot_ref[0, 0] = c[-1]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array, *,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          tile: int | None = None) -> jax.Array:
     """ts: (C,); t_queries: (Q,) -> (Q, C) int32 inclusive cumsum of
     (ts <= t_q) per query. interpret=None: kernel on TPU, jitted ref on CPU;
-    True: force kernel (interpret mode off-TPU)."""
+    True: force kernel (interpret mode off-TPU). ``tile`` overrides the
+    resolved launch tile (static; autotune sweeps pass it explicitly)."""
+    if tile is None:
+        tile = launch.tile_for("batched_select", n=ts.shape[0])
+    return _batched_masked_cumsum(ts, t_queries, interpret=interpret,
+                                  tile=int(tile))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def _batched_masked_cumsum(ts, t_queries, *, interpret, tile):
     t_queries = jnp.asarray(t_queries, dtype=ts.dtype)
     if interpret is None:
         if interpret_default():
@@ -49,21 +79,21 @@ def batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array, *,
     (q,) = t_queries.shape
     if c == 0 or q == 0:
         return jnp.zeros((q, c), jnp.int32)
-    c_pad = cdiv(c, TILE_C) * TILE_C
+    c_pad = launch.round_up_tile(c, tile)
     if c_pad != c:
         # pad above every possible query (queries are clamped below TS_MAX)
         pad = jnp.full((c_pad - c,), jnp.iinfo(ts.dtype).max, ts.dtype)
         ts = jnp.concatenate([ts, pad])
-    n_tiles = c_pad // TILE_C
+    n_tiles = c_pad // tile
     intra, totals = pl.pallas_call(
         _batched_masked_cumsum_kernel,
         grid=(n_tiles, q),
         in_specs=[
-            pl.BlockSpec((TILE_C,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
             pl.BlockSpec((1,), lambda i, j: (j,)),
         ],
         out_specs=[
-            pl.BlockSpec((1, TILE_C), lambda i, j: (j, i)),
+            pl.BlockSpec((1, tile), lambda i, j: (j, i)),
             pl.BlockSpec((1, 1), lambda i, j: (j, i)),
         ],
         out_shape=[
@@ -75,8 +105,10 @@ def batched_masked_cumsum(ts: jax.Array, t_queries: jax.Array, *,
     offsets = jnp.concatenate(
         [jnp.zeros((q, 1), jnp.int32), jnp.cumsum(totals, axis=1)[:, :-1]],
         axis=1)
-    out = intra + jnp.repeat(offsets, TILE_C, axis=1,
-                             total_repeat_length=c_pad)
+    # broadcast-reshape, not jnp.repeat: adds the per-tile offset without
+    # materializing a (q, c_pad) repeat buffer first
+    out = (intra.reshape(q, n_tiles, tile)
+           + offsets[:, :, None]).reshape(q, c_pad)
     return out[:, :c]
 
 
@@ -88,14 +120,22 @@ def _stacked_masked_cumsum_kernel(ts_ref, tq_ref, cum_ref, tot_ref):
     tot_ref[0, 0, 0] = c[-1]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def stacked_masked_cumsum(ts_stack: jax.Array, t_queries: jax.Array, *,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          tile: int | None = None) -> jax.Array:
     """ts_stack: (S, C); t_queries: (Q,) -> (S, Q, C) int32 inclusive
     cumsum of (ts <= t_q) per (shard, query) — the batched kernel with one
     extra grid axis over shards, so S independent fused superlogs scan in
     ONE launch. Pad rows (and ragged tails) with a value above every
     query (int32 max > TS_MAX); padded cells never count."""
+    if tile is None:
+        tile = launch.tile_for("batched_select", n=ts_stack.shape[-1])
+    return _stacked_masked_cumsum(ts_stack, t_queries, interpret=interpret,
+                                  tile=int(tile))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def _stacked_masked_cumsum(ts_stack, t_queries, *, interpret, tile):
     t_queries = jnp.asarray(t_queries, dtype=ts_stack.dtype)
     if interpret is None:
         if interpret_default():
@@ -105,21 +145,21 @@ def stacked_masked_cumsum(ts_stack: jax.Array, t_queries: jax.Array, *,
     (q,) = t_queries.shape
     if s == 0 or c == 0 or q == 0:
         return jnp.zeros((s, q, c), jnp.int32)
-    c_pad = cdiv(c, TILE_C) * TILE_C
+    c_pad = launch.round_up_tile(c, tile)
     if c_pad != c:
         pad = jnp.full((s, c_pad - c), jnp.iinfo(ts_stack.dtype).max,
                        ts_stack.dtype)
         ts_stack = jnp.concatenate([ts_stack, pad], axis=1)
-    n_tiles = c_pad // TILE_C
+    n_tiles = c_pad // tile
     intra, totals = pl.pallas_call(
         _stacked_masked_cumsum_kernel,
         grid=(s, n_tiles, q),
         in_specs=[
-            pl.BlockSpec((1, TILE_C), lambda k, i, j: (k, i)),
+            pl.BlockSpec((1, tile), lambda k, i, j: (k, i)),
             pl.BlockSpec((1,), lambda k, i, j: (j,)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, TILE_C), lambda k, i, j: (k, j, i)),
+            pl.BlockSpec((1, 1, tile), lambda k, i, j: (k, j, i)),
             pl.BlockSpec((1, 1, 1), lambda k, i, j: (k, j, i)),
         ],
         out_shape=[
@@ -131,9 +171,22 @@ def stacked_masked_cumsum(ts_stack: jax.Array, t_queries: jax.Array, *,
     offsets = jnp.concatenate(
         [jnp.zeros((s, q, 1), jnp.int32),
          jnp.cumsum(totals, axis=2)[:, :, :-1]], axis=2)
-    out = intra + jnp.repeat(offsets, TILE_C, axis=2,
-                             total_repeat_length=c_pad)
+    out = (intra.reshape(s, q, n_tiles, tile)
+           + offsets[:, :, :, None]).reshape(s, q, c_pad)
     return out[:, :, :c]
+
+
+def scan_cache_size() -> int:
+    """Number of compiled entries behind the jitted scan wrappers — the
+    recompile-stability regression tests probe this to prove epoch rolls
+    under continuous ingest stay bounded by the shape-bucket count."""
+    n = 0
+    for fn in (_batched_masked_cumsum, _stacked_masked_cumsum):
+        try:
+            n += int(fn._cache_size())
+        except (AttributeError, TypeError):  # older/newer jax internals
+            return -1
+    return n
 
 
 def _boundary_take(cum: jax.Array, boundaries: jax.Array) -> jax.Array:

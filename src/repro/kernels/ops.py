@@ -9,9 +9,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import ref
-from .batched_select import batched_masked_cumsum, batched_version_select
-from .delta_codec import (chain_pack, chain_unpack, delta_pack, delta_unpack,
+from . import launch, ref
+from .batched_select import (batched_masked_cumsum, batched_version_select,
+                             scan_bucket, scan_cache_size)
+from .compact_rewrite import compact_rewrite
+from .delta_codec import (chain_decode, chain_pack, chain_unpack, delta_pack,
+                          delta_pack_wide, delta_unpack, delta_unpack_wide,
                           narrow_dtype)
 from .fingerprint import fingerprint
 from .flash_attention import flash_attention
@@ -22,9 +25,11 @@ from .version_select import masked_cumsum, version_select
 __all__ = [
     "fingerprint", "fingerprint_rows", "masked_cumsum", "version_select",
     "batched_masked_cumsum", "batched_version_select",
+    "scan_bucket", "scan_cache_size", "compact_rewrite",
     "delta_pack", "delta_unpack", "chain_pack", "chain_unpack",
+    "delta_pack_wide", "delta_unpack_wide", "chain_decode",
     "narrow_dtype", "masked_merge", "shard_route", "route_keys",
-    "merge_shard_rows", "flash_attention", "to_int_lanes", "ref",
+    "merge_shard_rows", "flash_attention", "to_int_lanes", "launch", "ref",
 ]
 
 

@@ -185,6 +185,38 @@ def ref_delta_unpack(delta: jax.Array, old: jax.Array) -> jax.Array:
     return delta + old
 
 
+def ref_delta_pack64(new: np.ndarray, old: np.ndarray) -> np.ndarray:
+    """Host oracle for the two-lane 8-byte pack: exact 64-bit modular
+    subtract (or lane XOR for float64) in numpy — the semantic ground
+    truth ``delta_pack_wide`` must reproduce lane-by-lane."""
+    if np.issubdtype(new.dtype, np.floating):
+        return (new.view(np.int64) ^ old.view(np.int64)).view(new.dtype)
+    with np.errstate(over="ignore"):
+        return new - old
+
+
+def ref_delta_unpack64(delta: np.ndarray, old: np.ndarray) -> np.ndarray:
+    """Host oracle for the two-lane 8-byte unpack (modular add / XOR)."""
+    if np.issubdtype(delta.dtype, np.floating):
+        return (delta.view(np.int64) ^ old.view(np.int64)).view(delta.dtype)
+    with np.errstate(over="ignore"):
+        return delta + old
+
+
+def ref_chain_decode(deltas: np.ndarray, heads: np.ndarray, *,
+                     xor: bool = False) -> np.ndarray:
+    """Host oracle for the device segmented chain decode: sequential
+    prefix op within each head-delimited chain (int path widened to int32
+    exactly like the device scan; caller truncates to the stored dtype)."""
+    out = (deltas.copy() if xor
+           else deltas.astype(np.int32))
+    with np.errstate(over="ignore"):
+        for i in range(1, len(out)):
+            if not heads[i]:
+                out[i] = (out[i] ^ out[i - 1]) if xor else out[i] + out[i - 1]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # masked_merge: fused (row-mask & field-mask) select + EXISTS/ts stamping.
 # ---------------------------------------------------------------------------

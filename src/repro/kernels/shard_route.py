@@ -24,14 +24,13 @@ from typing import Sequence
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.obs import kerneltel
+from . import launch, ref
+from ._compat import interpret_default
 
-from . import ref
-from ._compat import cdiv, interpret_default
-
-TILE_N = 512
+#: pre-autotune hardcoded tile, kept for backward compatibility; live
+#: launches resolve through launch.tile_for("shard_route").
+TILE_N = launch.DEFAULT_TILES["shard_route"]
 
 #: routing-function version tag, persisted in shard manifests: a store
 #: written under one tag must never be extended by a different hash.
@@ -53,13 +52,21 @@ def _shard_route_kernel(lanes_ref, len_ref, out_ref, *, w: int, n_shards: int):
     out_ref[:] = (h & jnp.int32(0x7FFFFFFF)) % jnp.int32(n_shards)
 
 
-@functools.partial(jax.jit, static_argnames=("n_shards", "interpret"))
 def shard_route(lanes: jax.Array, lengths: jax.Array, n_shards: int, *,
-                interpret: bool | None = None) -> jax.Array:
+                interpret: bool | None = None,
+                tile: int | None = None) -> jax.Array:
     """lanes: (N, W) int32; lengths: (N,) int32 -> (N,) int32 shard ids.
 
     interpret=None: Pallas kernel on TPU, jitted ref oracle on CPU;
     interpret=True: force the kernel body via the Pallas interpreter."""
+    if tile is None:
+        tile = launch.tile_for("shard_route", n=lanes.shape[0])
+    return _shard_route(lanes, lengths, int(n_shards), interpret=interpret,
+                        tile=int(tile))
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "interpret", "tile"))
+def _shard_route(lanes, lengths, n_shards, *, interpret, tile):
     if interpret is None:
         if interpret_default():
             return ref.ref_shard_route(lanes, lengths, n_shards)
@@ -67,22 +74,11 @@ def shard_route(lanes: jax.Array, lengths: jax.Array, n_shards: int, *,
     n, w = lanes.shape
     if n == 0:
         return jnp.zeros((0,), jnp.int32)
-    n_pad = cdiv(n, TILE_N) * TILE_N
-    if n_pad != n:
-        lanes = jnp.pad(lanes, ((0, n_pad - n), (0, 0)))
-        lengths = jnp.pad(lengths, (0, n_pad - n))
-    out = pl.pallas_call(
+    (out,) = launch.tiled_rows(
         functools.partial(_shard_route_kernel, w=w, n_shards=n_shards),
-        grid=(n_pad // TILE_N,),
-        in_specs=[
-            pl.BlockSpec((TILE_N, w), lambda i: (i, 0)),
-            pl.BlockSpec((TILE_N,), lambda i: (i,)),
-        ],
-        out_specs=pl.BlockSpec((TILE_N,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
-        interpret=interpret,
-    )(lanes, lengths)
-    return out[:n]
+        [lanes, lengths], [((), jnp.int32, "rows")],
+        tile=tile, interpret=interpret)
+    return out
 
 
 # -- host plumbing ------------------------------------------------------------
@@ -116,9 +112,11 @@ def route_keys(keys: Sequence[bytes], n_shards: int) -> np.ndarray:
     n, w = lanes.shape
     # traffic model: read (N, W) lanes + (N,) lengths, write (N,) ids;
     # arithmetic: ~8 integer ops per lane in the xor-rotate fold + the
-    # 5-op finalizer per key
-    with kerneltel.launch("shard_route", nbytes=4 * (n * w + 2 * n),
-                          flops=n * (8 * w + 5)):
+    # 5-op finalizer per key; padded counts the tile-multiple row slack
+    n_pad = launch.round_up_tile(n, launch.tile_for("shard_route", n=n))
+    with launch.measured("shard_route", nbytes=4 * (n * w + 2 * n),
+                         flops=n * (8 * w + 5),
+                         padded_nbytes=4 * (n_pad * w + 2 * n_pad)):
         return np.asarray(shard_route(jnp.asarray(lanes), jnp.asarray(lens),
                                       int(n_shards)))
 
