@@ -4,7 +4,8 @@ Prints ``name,us_per_call,derived`` CSV and merges the same rows into
 ``BENCH_results.json`` (the CI artifact) *per table*: a run replaces only
 the tables it attempted, so a partial or BENCH_TABLES-filtered run no
 longer clobbers earlier results. Set BENCH_N / BENCH_APP_N / BENCH_BATCH_N
-/ BENCH_STORE_N / BENCH_SHARD_N / BENCH_SHARDS / BENCH_SERVE_* to scale
+/ BENCH_STORE_N / BENCH_SHARD_N / BENCH_SHARDS / BENCH_SERVE_* /
+BENCH_INGEST_* to scale
 (defaults sized
 for a single CPU core; the operations are row-parallel, see DESIGN.md §8
 for the pod-scale throughput argument), and BENCH_TABLES to a
@@ -65,11 +66,12 @@ def main() -> None:
                             table2_incremental, table3_split,
                             table4_application, table5_batched,
                             table6_storage, table7_sharding, table9_serving,
-                            table10_observability, table11_kernels)
+                            table10_observability, table11_kernels,
+                            table12_ingest)
     mods = [table1_lifecycle, table2_incremental, table3_split,
             table4_application, table5_batched, table6_storage,
             table7_sharding, table9_serving, table10_observability,
-            table11_kernels, fig1_growth, roofline_table]
+            table11_kernels, table12_ingest, fig1_growth, roofline_table]
     only = {w.strip() for w in os.environ.get("BENCH_TABLES", "").split(",")
             if w.strip()}
     if only:

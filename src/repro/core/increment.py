@@ -236,6 +236,61 @@ class GeStore:
         self.tables.record_update(store_name, info)
         return info
 
+    def ingest_journal_path(self, store_name: str) -> str:
+        """Sidecar ingest-journal directory for a store (under the root,
+        next to — never inside — the store's segment directory)."""
+        from .segments import store_dir_name
+        return os.path.join(self.root, "ingest", store_dir_name(store_name))
+
+    def add_release_stream(self, store_name: str, ts: int, source, *,
+                           parser_name: str, label: str = "",
+                           full_release: bool = True, shards: int = 1,
+                           config=None, resumable: bool = True,
+                           pressure_fn: Callable[[], float] | None = None):
+        """Streaming sibling of ``add_release``: ingest a release from a
+        file path / chunk iterable / ``callable(start) -> chunks`` without
+        ever holding it in host memory, with shard-parallel update waves
+        and (by default) a crash-resumable chunk journal under the root.
+
+        After a crash, call again with the same arguments — journaled
+        chunks replay and parsing resumes mid-file (core/ingest.py has the
+        protocol). The store is flushed to its directory as part of the
+        ingest (pre-release and post-commit), so a separate ``flush()`` is
+        not needed for durability.
+
+        Args:
+          source: release file path (resumable via seek), iterable of text
+            chunks, or ``callable(start_offset) -> chunk iterable``.
+          config: ``IngestConfig`` pipeline knobs (None = defaults).
+          resumable: journal parsed chunks for crash-resume. False skips
+            the journal AND the pre/post store saves (purely in-memory
+            ingest; call ``flush()`` yourself).
+          pressure_fn: mutation backpressure source, e.g. a serving
+            ``TieredStorePool.pressure`` (honoured when
+            ``config.max_pressure`` is set).
+
+        Returns:
+          ``IngestReport`` (``.info`` is the release's VersionInfo;
+          ``.already_committed`` when a resume found it already applied).
+        """
+        from .ingest import ingest_release
+        parser = self.registry.parsers[parser_name]
+        try:
+            store = self.open_store(store_name)
+        except KeyError:
+            store = self.create_store(store_name, parser.schema(),
+                                      shards=shards, capacity=1024)
+        rep = ingest_release(
+            store, source, parser, ts, label=label,
+            full_release=full_release, config=config,
+            journal_dir=(self.ingest_journal_path(store_name)
+                         if resumable else None),
+            store_dir=self.store_path(store_name) if resumable else None,
+            pressure_fn=pressure_fn)
+        if rep.info is not None:
+            self.tables.record_update(store_name, rep.info)
+        return rep
+
     # -- workflow-manager interface (Fig. 3 right) ---------------------------
     def generate_files(self, tool: str, store_name: str, *, t_version: int,
                        t_last: int | None = None,

@@ -25,31 +25,46 @@ class MgaParser(FileParser):
         ]
 
     def split_entry(self, entry: str):
-        # one *contig block*; framework-level parse_text flattens genes
-        raise NotImplementedError("use parse_text (block format)")
+        # one *contig block*; framework-level iter_records flattens genes
+        raise NotImplementedError("use iter_records / parse_text (block format)")
 
-    def parse_text(self, text: str):
-        keys, coords, scores = [], [], []
+    def iter_records(self, chunks):
+        # block format: a line-granular state machine carrying the active
+        # contig across chunk boundaries (and across `# gc`/`# self` stats
+        # lines, which must not reset it). parse_text rides on this, so
+        # chunked and whole-file parses share one code path.
         contig = ""
-        for line in text.splitlines():
-            if line.startswith("# gc") or line.startswith("# self"):
-                continue  # MGA stats headers
-            if line.startswith("#"):
-                contig = line[1:].strip().split()[0]
+        tail = ""
+        for chunk in chunks:
+            if not chunk:
                 continue
-            cols = line.split()
-            if len(cols) < 7:
-                continue
-            gene_id, start, end, strand = cols[0], int(cols[1]), int(cols[2]), cols[3]
-            score = float(cols[6])
-            keys.append(f"{contig}|{gene_id}".encode())
-            coords.append(np.asarray([start, end, 1 if strand == "+" else -1],
-                                     np.int32))
-            scores.append(np.asarray([score], np.float32))
-        if not keys:
-            return [], {"coords": np.zeros((0, 3), np.int32),
-                        "score": np.zeros((0, 1), np.float32)}
-        return keys, {"coords": np.stack(coords), "score": np.stack(scores)}
+            parts = (tail + chunk).split("\n")
+            tail = parts.pop()
+            for line in parts:
+                rec, contig = self._line_record(line, contig)
+                if rec is not None:
+                    yield rec
+        if tail:
+            rec, contig = self._line_record(tail, contig)
+            if rec is not None:
+                yield rec
+
+    def _line_record(self, line: str, contig: str):
+        """One MGA output line -> (record | None, active contig)."""
+        if line.startswith("# gc") or line.startswith("# self"):
+            return None, contig  # MGA stats headers
+        if line.startswith("#"):
+            return None, line[1:].strip().split()[0]
+        cols = line.split()
+        if len(cols) < 7:
+            return None, contig
+        gene_id, start, end, strand = cols[0], int(cols[1]), int(cols[2]), cols[3]
+        score = float(cols[6])
+        key = f"{contig}|{gene_id}".encode()
+        row = {"coords": np.asarray([start, end, 1 if strand == "+" else -1],
+                                    np.int32),
+               "score": np.asarray([score], np.float32)}
+        return (key, row), contig
 
     def format_entry(self, key: bytes, row: dict[str, np.ndarray]) -> str:
         contig, gene = key.decode().split("|")

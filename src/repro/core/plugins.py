@@ -61,27 +61,124 @@ class FileParser(abc.ABC):
 
     # -- framework-provided bulk helpers (plugins get these for free) --------
     def parse_text(self, text: str) -> tuple[list[bytes], dict[str, np.ndarray]]:
+        # routed through the streaming path so whole-file and chunked
+        # parses share one implementation (byte-identity by construction)
         keys, rows = [], []
-        for entry in self.iter_entries(text):
-            k, r = self.split_entry(entry)
+        for k, r in self.iter_records([text]):
             keys.append(k)
             rows.append(r)
         if not rows:
-            return [], {f.name: np.zeros((0, f.width), f.np_dtype)
-                        for f in self.schema()}
-        table = {name: np.stack([r[name] for r in rows])
-                 for name in rows[0]}
-        return keys, table
+            return [], self.empty_table()
+        return keys, self.stack_rows(rows)
 
     def iter_entries(self, text: str) -> Iterable[str]:
+        return self.iter_entries_chunks([text])
+
+    def iter_entries_chunks(self, chunks: Iterable[str]) -> Iterable[str]:
+        """Split a release streamed as arbitrary text chunks into entries.
+
+        Yields the same entry strings ``iter_entries`` produces on the
+        concatenated text, without ever materialising the whole release:
+        only the current entry and one partial line are buffered. Start
+        regexes are line-anchored (``^...``) and must be decidable within
+        a line plus its terminating newline — true of every shipped
+        parser. Text before the first entry start is dropped and a
+        truncated final record is still yielded, both exactly as in the
+        whole-file split.
+        """
+        for entry, _ in self.iter_entries_with_offsets(chunks):
+            yield entry
+
+    def iter_entries_with_offsets(
+            self, chunks: Iterable[str],
+    ) -> Iterable[tuple[str, int]]:
+        """``(entry, end_offset)`` pairs from streamed chunks.
+
+        ``end_offset`` is the absolute character offset one past the
+        entry's last character — equivalently, the offset the *next*
+        entry starts at. A stream re-opened at that offset parses the
+        remaining entries identically (the resumable-ingest seek point;
+        character == byte for the ASCII release formats).
+        """
         import re
-        start_re, end_re = self.entry_pattern()
-        start = re.compile(start_re, re.M)
-        starts = [m.start() for m in start.finditer(text)]
-        if not starts:
-            return []
-        starts.append(len(text))
-        return [text[starts[i]:starts[i + 1]] for i in range(len(starts) - 1)]
+        start_re, _ = self.entry_pattern()
+        rx = re.compile(start_re, re.M)
+        buf = ""          # from the current entry's start (or stream junk)
+        base = 0          # absolute offset of buf[0]
+        started = False   # buf[0] is a real entry start
+        for chunk in chunks:
+            if not chunk:
+                continue
+            buf += chunk
+            # only complete lines are decidable: a start pattern must be
+            # resolvable within a line + its newline (the parser contract),
+            # so matching stops at the last newline and the partial final
+            # line carries over to the next chunk
+            cut = buf.rfind("\n") + 1
+            if not cut:
+                continue
+            # C-speed scan; pos=1 skips buf[0] when it is the (already
+            # known) current entry's start, and ``^`` still anchors to
+            # true line boundaries regardless of pos
+            starts = [m.start()
+                      for m in rx.finditer(buf, 1 if started else 0, cut)]
+            if started:
+                starts.insert(0, 0)
+            if not starts:
+                # no entry yet: everything decidable is droppable prefix
+                base += cut
+                buf = buf[cut:]
+                continue
+            for i in range(len(starts) - 1):
+                yield buf[starts[i]:starts[i + 1]], base + starts[i + 1]
+            base += starts[-1]
+            buf = buf[starts[-1]:]
+            started = True
+        if buf:
+            # EOF terminates the final (possibly newline-less) line, so
+            # the held-back tail becomes decidable: split any entry
+            # starts in it exactly as the whole-file finditer would
+            starts = [m.start()
+                      for m in rx.finditer(buf, 1 if started else 0)]
+            if started:
+                starts.insert(0, 0)
+            for i in range(len(starts) - 1):
+                yield buf[starts[i]:starts[i + 1]], base + starts[i + 1]
+            if starts:
+                yield buf[starts[-1]:], base + len(buf)
+
+    def iter_records(
+            self, chunks: Iterable[str],
+    ) -> Iterable[tuple[bytes, dict[str, np.ndarray]]]:
+        """(key, field->row) records from streamed text chunks. Block
+        formats whose ``split_entry`` is undefined override this."""
+        for entry in self.iter_entries_chunks(chunks):
+            yield self.split_entry(entry)
+
+    def parse_chunks(
+            self, chunks: Iterable[str], batch_entries: int = 512,
+    ) -> Iterable[tuple[list[bytes], dict[str, np.ndarray]]]:
+        """Stream text chunks into ``(keys, table)`` batches of at most
+        ``batch_entries`` rows — the bounded-memory ingest feed."""
+        keys: list[bytes] = []
+        rows: list[dict[str, np.ndarray]] = []
+        for k, r in self.iter_records(chunks):
+            keys.append(k)
+            rows.append(r)
+            if len(keys) >= batch_entries:
+                yield keys, self.stack_rows(rows)
+                keys, rows = [], []
+        if keys:
+            yield keys, self.stack_rows(rows)
+
+    def stack_rows(
+            self, rows: Sequence[dict[str, np.ndarray]],
+    ) -> dict[str, np.ndarray]:
+        return {name: np.stack([r[name] for r in rows]) for name in rows[0]}
+
+    def empty_table(self) -> dict[str, np.ndarray]:
+        return {f.name: np.zeros((0, f.width), f.np_dtype)
+                for f in self.schema()}
 
     def format_view(self, view: VersionView | Increment) -> str:
         out = []

@@ -48,10 +48,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.kernels.shard_route import (ROUTING_VERSION, merge_shard_rows,
                                        route_keys)
 
@@ -454,6 +456,19 @@ class ShardedStore:
                            n_deleted=n_del)
         self.versions.append(info)
         return info
+
+    def begin_release(self, ts: Timestamp, *, label: str = "",
+                      full_release: bool = True,
+                      parallel: bool | None = None) -> "ShardedReleaseSession":
+        """Open a chunked wave-parallel mutation session for ONE release
+        (see ``ShardedReleaseSession``). ``parallel=None`` applies shard
+        sub-chunks concurrently whenever the store has more than one
+        shard AND the host has more than one CPU; pass False to force the
+        serial loop (the equivalence tests' reference mode), True to
+        force threaded waves."""
+        return ShardedReleaseSession(self, ts, label=label,
+                                     full_release=full_release,
+                                     parallel=parallel)
 
     def delete(self, ts: Timestamp, keys: Sequence[bytes], *,
                label: str = "") -> VersionInfo:
@@ -872,3 +887,165 @@ class ShardedStore:
         # manifest — leave it save-dirty so the next spill/flush commits it
         obj._saved_epoch = None if adopted else obj.log_epoch
         return obj
+
+
+class ShardedReleaseSession:
+    """Chunked wave-parallel mutation of a ShardedStore for ONE release.
+
+    The streaming twin of ``ShardedStore.update``: every ``apply(keys,
+    table)`` routes the chunk with the ``shard_route`` kernel, allocates
+    global rows in first-seen order (identical to the whole-file order for
+    unique-key releases), then applies the per-shard sub-chunks as one
+    concurrent *wave* — each shard's ``ReleaseSession.apply`` runs on its
+    own single-thread executor, closing the serial-scatter edge PR 4 left
+    open. Shards partition the row space, so wave workers never share
+    mutable state, and a shard's executor serializes ITS sub-applies in
+    wave order — which lets ``apply`` return as soon as the wave is
+    dispatched: routing + fingerprinting chunk k+1 overlaps the shard
+    workers still applying chunk k. A worker failure surfaces on the next
+    ``apply`` (or at ``finish()``), which is the right boundary: a
+    mid-release session is discard-only anyway (the ingest journal owns
+    crash recovery).
+
+    ``finish()`` commits every shard's release (tombstone scans run
+    per shard over its own touched rows), then appends the single facade
+    VersionInfo — one atomically-validated release timestamp, exactly as
+    the whole-file path. The committed store is byte-identical to a
+    whole-file ``update`` of the concatenated chunks (cells, heads,
+    counts, per-shard digest chains) for unique-key releases.
+    """
+
+    def __init__(self, store: ShardedStore, ts: Timestamp, *,
+                 label: str = "", full_release: bool = True,
+                 parallel: bool | None = None):
+        #   residency FIRST so the monotonicity floor sees crash-skewed
+        #   spilled shards too (mirrors update())
+        shards = store._prepare_mutation([])
+        floor = store._monotonic_floor()
+        if ts <= floor:
+            raise ValueError(
+                f"timestamps must be monotonic: {ts} <= {floor}")
+        self.store = store
+        self.ts = int(ts)
+        self.label = label
+        self.full_release = full_release
+        self.n_entries = 0
+        self._sessions = [
+            sh.begin_release(ts, label=label, full_release=full_release)
+            for sh in shards]
+        if parallel is None:
+            from .ingest import _cpu_count
+            # threaded waves only pay when there is a core to run them on
+            parallel = store.n_shards > 1 and _cpu_count() > 1
+        self._parallel = bool(parallel)
+        # one single-thread executor PER SHARD: cross-shard parallel,
+        # in-order per shard (required for byte-identical digest chains)
+        self._execs = ([ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"ingest-{store.name}-s{s}")
+            for s in range(store.n_shards)] if self._parallel else None)
+        self._futs: list = []
+        self._finished = False
+
+    def _drain(self, *, wait: bool) -> None:
+        """Surface worker failures; with ``wait`` also barrier the waves."""
+        pending = []
+        for f in self._futs:
+            if wait or f.done():
+                f.result()  # re-raises the worker's exception
+            else:
+                pending.append(f)
+        self._futs = pending
+
+    def apply(self, keys: Sequence[bytes],
+              table: Mapping[str, np.ndarray]) -> int:
+        """Route one chunk and apply its per-shard sub-chunks as one
+        concurrent wave; returns the chunk entry count. Facade-level
+        validation runs before any shard mutates (chunks already applied
+        stay applied — the ingest journal owns crash recovery)."""
+        if self._finished:
+            raise RuntimeError("release session already finished")
+        self._drain(wait=False)  # propagate any earlier wave's failure
+        st = self.store
+        keys = _as_bytes(keys)
+        new_fields: dict[str, FieldSchema] = {}
+        for name in table:
+            if name not in st.schema:
+                # chunk-local inference (see ReleaseSession.apply NOTE);
+                # the ingest engine pre-declares the parser schema instead
+                fs = infer_field_schema(name, table[name])
+                st.shard(0)._validate_new_field(fs)
+                new_fields[name] = fs
+        arrays = {}
+        for name, v in table.items():
+            fs = new_fields.get(name) or st.schema[name]
+            arr = _checked_cast(name, np.asarray(v), fs.np_dtype)
+            arrays[name] = arr if arr.ndim > 1 else arr[:, None]
+            want = (len(keys), fs.width)
+            assert arrays[name].shape == want, (
+                f"{name}: {arrays[name].shape} != {want}")
+        if new_fields:
+            self._drain(wait=True)  # shard dicts mutate: barrier the waves
+            for fs in new_fields.values():
+                st.add_field(fs)
+        sid = st._route(keys)
+        st._alloc_rows(keys, sid)
+        # fingerprint the whole chunk ONCE per field: one kernel launch
+        # each instead of n_shards small ones inside the sub-applies (the
+        # dominant per-wave fixed cost); shards slice the shared result
+        fps = {name: kops.fingerprint_rows(arr)
+               for name, arr in arrays.items()}
+        names = list(table)
+        for s in range(st.n_shards):
+            m = sid == s
+            if not m.any():
+                continue  # empty sub-chunk: nothing to apply, digest-neutral
+            skeys = [k for k, mm in zip(keys, m) if mm]
+            stable = {name: arr[m] for name, arr in arrays.items()}
+            sfps = {name: fp[m] for name, fp in fps.items()}
+            sh, sess = st.shard(s), self._sessions[s]
+
+            def work(sh=sh, sess=sess, skeys=skeys, stable=stable,
+                     sfps=sfps):
+                # pre-read this shard's on-disk segments (corrupt segments
+                # raise here, before the shard mutates), then apply
+                sh.rebuild_heads([n for n in names if n in sh.fields])
+                sess.apply(skeys, stable, _precast=True, _fps=sfps)
+
+            if self._execs is not None:
+                self._futs.append(self._execs[s].submit(work))
+            else:
+                work()
+        self.n_entries += len(keys)
+        return len(keys)
+
+    def finish(self) -> VersionInfo:
+        """Barrier the in-flight waves, commit every shard's release
+        (concurrently under a parallel session — tombstone scans are
+        per-shard too) and append the single facade version record."""
+        if self._finished:
+            raise RuntimeError("release session already finished")
+        self._finished = True
+        try:
+            self._drain(wait=True)
+            if self._execs is not None:
+                futs = [ex.submit(sess.finish)
+                        for ex, sess in zip(self._execs, self._sessions)]
+                infos = [f.result() for f in futs]
+            else:
+                infos = [sess.finish() for sess in self._sessions]
+        finally:
+            self.close()
+        info = VersionInfo(ts=self.ts, label=self.label or str(self.ts),
+                           n_entries=self.n_entries,
+                           n_new=sum(i.n_new for i in infos),
+                           n_updated=sum(i.n_updated for i in infos),
+                           n_deleted=sum(i.n_deleted for i in infos))
+        self.store.versions.append(info)
+        return info
+
+    def close(self) -> None:
+        """Release the wave executors (idempotent; finish() calls it)."""
+        if self._execs is not None:
+            for ex in self._execs:
+                ex.shutdown(wait=True)
+            self._execs = None

@@ -638,6 +638,172 @@ class _FieldColumn:
         self.head_has = g(self.head_has)
 
 
+class ReleaseSession:
+    """Chunked single-release mutation (the streaming-ingest write path).
+
+    ``store.begin_release(ts)`` -> repeated ``apply(keys, table)`` (one
+    bounded-memory chunk each) -> ``finish()``. The committed result is
+    equivalent to one whole-file ``update(ts, all_keys, all_table)`` over
+    the concatenated chunks — identical cells, heads, counts, VersionInfo
+    AND content digest — provided keys are unique within the release
+    (true of real database releases; a duplicate key repeating identical
+    values would be fingerprint-skipped here but double-appended by the
+    whole-file path).
+
+    Each ``apply`` validates everything before mutating anything, exactly
+    like ``update`` — but the release only commits at ``finish()``: the
+    tombstone scan (full releases), the VersionInfo record and the
+    digest-chain link all happen there. A session abandoned mid-way
+    leaves cells at ``ts`` in the logs with NO version record — in-memory
+    state that must be discarded (the ingest journal's resume protocol
+    reloads the pre-release store from disk and replays chunks).
+
+    ``present_keys`` patch semantics are not supported — use ``update``.
+    """
+
+    def __init__(self, store: "VersionedStore", ts: Timestamp, *,
+                 label: str = "", full_release: bool = True):
+        if ts <= store.last_ts:
+            raise ValueError(
+                f"timestamps must be monotonic: {ts} <= {store.last_ts}")
+        store._ensure_exists_head()
+        self.store = store
+        self.ts = int(ts)
+        self.label = label
+        self.full_release = full_release
+        self.n_entries = 0
+        self._n_new = 0
+        self._n_upd = 0
+        self._rows_parts: list[np.ndarray] = []    # rows touched, per chunk
+        # digest-chain payload accumulators, assembled at finish() into the
+        # exact byte layout update() hashes: per-field blocks in first-seen
+        # table order, then appearing rows, then tombstoned rows
+        self._field_order: list[str] = []
+        self._field_rows: dict[str, list[bytes]] = {}
+        self._field_fps: dict[str, list[bytes]] = {}
+        self._appear_parts: list[bytes] = []
+        self._finished = False
+
+    def apply(self, keys: Sequence[bytes],
+              table: Mapping[str, np.ndarray], *,
+              _precast: bool = False, _fps=None) -> int:
+        """Ingest one chunk of the release; returns the chunk entry count.
+
+        Validation order mirrors ``update``: key encode, schema inference
+        for unseen fields, value-checked casts and shape asserts all run
+        before the first cell append, so a rejected chunk leaves no
+        phantom columns, rows or cells. NOTE: schema inference for a new
+        field sees only this chunk's value block — pre-declare fields via
+        ``add_field`` (the ingest engine passes the parser schema) when a
+        later chunk might need a wider dtype.
+
+        ``_precast``/``_fps`` are the sharded facade's wave fast path:
+        the facade already value-cast the full chunk and fingerprinted it
+        with ONE kernel launch per field, so the per-shard sub-applies
+        skip the cast and slice the shared fingerprints instead of
+        launching ``n_shards`` small fingerprint kernels per field."""
+        if self._finished:
+            raise RuntimeError("release session already finished")
+        st = self.store
+        keys = [k.encode() if isinstance(k, str) else bytes(k) for k in keys]
+        new_fields: dict[str, FieldSchema] = {}
+        if not _precast:
+            for name in table:
+                if name not in st.fields:
+                    fs = infer_field_schema(name, table[name])
+                    st._validate_new_field(fs)
+                    new_fields[name] = fs
+        casted: dict[str, np.ndarray] = {}
+        for name, vals in table.items():
+            if _precast:
+                casted[name] = vals
+            else:
+                fs = new_fields.get(name) or st.fields[name].schema
+                vals = _checked_cast(name, vals, fs.np_dtype)
+                if vals.ndim == 1:
+                    vals = vals[:, None]
+                assert vals.shape == (len(keys), fs.width), (
+                    f"{name}: {vals.shape} != {(len(keys), fs.width)}")
+                casted[name] = vals
+            if name not in self._field_rows:
+                self._field_order.append(name)
+                self._field_rows[name] = []
+                self._field_fps[name] = []
+        for fs in new_fields.values():
+            st.add_field(fs)
+        was_known = np.fromiter((k in st.key_to_row for k in keys), bool,
+                                count=len(keys))
+        rows = st._rows_for_keys(keys, create=True)
+        existed = np.zeros(len(keys), bool)
+        existed[was_known] = st._exists_head[rows[was_known]]
+        is_new = ~existed
+        chunk_updated = np.zeros(st.n_rows, bool)
+        for name, vals in casted.items():
+            col = st.fields[name]
+            st._ensure_head(name)
+            fp = (_fps[name] if _fps is not None
+                  else kops.fingerprint_rows(vals))
+            same = (fp == col.head_fp[rows]).all(axis=1) & col.head_has[rows]
+            changed = ~same
+            if changed.any():
+                cr = rows[changed]
+                col.log.append(cr, self.ts, vals[changed])
+                col.head_vals[cr] = vals[changed]
+                col.head_fp[cr] = fp[changed]
+                col.head_has[cr] = True
+                chunk_updated[cr] |= True
+                self._field_rows[name].append(cr.tobytes())
+                self._field_fps[name].append(
+                    np.ascontiguousarray(fp[changed]).tobytes())
+        appearing = rows[is_new]
+        if len(appearing):
+            st.exists_log.append(appearing, self.ts,
+                                 np.ones((len(appearing), 1), np.int8))
+            st._exists_head[appearing] = True
+            self._appear_parts.append(appearing.tobytes())
+        self.n_entries += len(keys)
+        self._n_new += int(is_new.sum())
+        self._n_upd += int((chunk_updated[rows] & existed).sum())
+        self._rows_parts.append(rows)
+        st._invalidate_log()  # mid-session queries must not reuse caches
+        return len(keys)
+
+    def finish(self) -> VersionInfo:
+        """Commit the release: tombstone scan (full releases), version
+        record, digest-chain link. Idempotence is the caller's job —
+        calling twice raises."""
+        if self._finished:
+            raise RuntimeError("release session already finished")
+        self._finished = True
+        st = self.store
+        hparts = [str(self.ts).encode(), str(self.n_entries).encode()]
+        for name in self._field_order:
+            if self._field_rows[name]:
+                hparts += [name.encode(), b"".join(self._field_rows[name]),
+                           b"".join(self._field_fps[name])]
+        if self._appear_parts:
+            hparts.append(b"".join(self._appear_parts))
+        n_deleted = 0
+        if self.full_release:
+            mask = np.zeros(st.n_rows, bool)
+            for rows in self._rows_parts:
+                mask[rows] = True
+            gone = np.nonzero(st._exists_head[: st.n_rows] & ~mask)[0]
+            if len(gone):
+                st.exists_log.append(gone.astype(np.int32), self.ts,
+                                     np.zeros((len(gone), 1), np.int8))
+                st._exists_head[gone] = False
+                n_deleted = len(gone)
+                hparts.append(gone.tobytes())
+        info = VersionInfo(ts=self.ts, label=self.label or str(self.ts),
+                           n_entries=self.n_entries, n_new=self._n_new,
+                           n_updated=self._n_upd, n_deleted=n_deleted)
+        st.versions.append(info)
+        st._chain_digest(b"".join(hparts))
+        st._invalidate_log()
+        return info
+
+
 class VersionedStore:
     """One meta-database (one HBase table in the paper).
 
@@ -961,6 +1127,13 @@ class VersionedStore:
         self._chain_digest(b"".join(hparts))
         self._invalidate_log()
         return info
+
+    def begin_release(self, ts: Timestamp, *, label: str = "",
+                      full_release: bool = True) -> ReleaseSession:
+        """Open a chunked mutation session for ONE release at ``ts`` —
+        the streaming twin of ``update`` (see ``ReleaseSession``)."""
+        return ReleaseSession(self, ts, label=label,
+                              full_release=full_release)
 
     def delete(self, ts: Timestamp, keys: Sequence[bytes], *, label: str = "") -> VersionInfo:
         """Tombstone ``keys`` at ``ts`` (history below ``ts`` is preserved).

@@ -56,6 +56,40 @@ class WorkflowManager:
             assert progressed, "workflow DAG has a cycle"
         return done
 
+    def ingest_release(self, store_name: str, ts: int, source, *,
+                       parser_name: str, label: str = "",
+                       full_release: bool = True, shards: int = 1,
+                       config=None, pressure_fn=None):
+        """Run a streaming release ingest as a journaled workflow step.
+
+        The data-feeder analogue of ``run()``: the ingest goes through
+        ``GeStore.add_release_stream`` (chunk-parallel parse, shard-wave
+        updates, resumable chunk journal under the GeStore root) and its
+        provenance lands in the ``runs`` table — a crashed ingest leaves
+        an unfinished run row plus the journal; re-invoking with the same
+        arguments records a fresh run that replays journaled chunks and
+        finishes the release.
+
+        Returns:
+          ``IngestReport`` from ``core.ingest``.
+        """
+        src_desc = source if isinstance(source, str) else f"<{type(source).__name__}>"
+        run_id = f"ingest:{store_name}@{ts}-{time.time_ns()}"
+        self.gs.tables.start_run(run_id, f"ingest:{store_name}", [src_desc],
+                                 {"ts": int(ts), "label": label,
+                                  "parser": parser_name,
+                                  "full_release": bool(full_release)})
+        rep = self.gs.add_release_stream(
+            store_name, ts, source, parser_name=parser_name, label=label,
+            full_release=full_release, shards=shards, config=config,
+            pressure_fn=pressure_fn)
+        self.gs.tables.finish_run(run_id, [
+            f"store:{store_name}@{ts}",
+            f"entries={rep.n_entries}",
+            f"chunks_replayed={rep.chunks_replayed}",
+            f"already_committed={rep.already_committed}"])
+        return rep
+
     def run(self, *, db_version: int, last_version: int | None = None,
             key_filter: str | None = None) -> WorkflowResult:
         """last_version=None: full run at db_version (pinned-version use

@@ -1,0 +1,295 @@
+"""Streaming-ingest engine (core/ingest.py): chunked-vs-whole-file byte
+identity, crash-resume replay, backpressure, and ingest observability.
+
+The resume test pins the PR's acceptance criterion: kill an ingest at
+chunk k, reload the store from disk, re-run the same call — only the
+remaining chunks are parsed (journaled ones replay) and the finished
+store is byte-identical to an uninterrupted run.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.ingest import (IngestConfig, IngestResumeError,
+                               ingest_release, synth_uniprot_chunks,
+                               write_synth_uniprot)
+from repro.core.parsers.uniprot import UniProtParser
+from repro.core.shard import ShardedStore
+from repro.core.store import VersionedStore
+from repro.obs import RECORDER, REGISTRY
+
+P = UniProtParser()
+N = 260
+
+
+def _digests(st):
+    if isinstance(st, ShardedStore):
+        return [st.shard(i)._history_digest for i in range(st.n_shards)]
+    return [st._history_digest]
+
+
+def _sharded(capacity=128):
+    return ShardedStore("ing", P.schema(), n_shards=4, capacity=capacity)
+
+
+def _release_file(tmp_path, n=N, seed=5, churn=0.0):
+    path = os.path.join(str(tmp_path), f"rel_{seed}_{churn}.dat")
+    write_synth_uniprot(path, n, seed=seed, churn=churn)
+    return path
+
+
+def _reference(path, st, ts=1, label="r"):
+    with open(path, encoding="latin-1") as f:
+        keys, table = P.parse_text(f.read())
+    st.update(ts, keys, table, label=label)
+    return st
+
+
+def test_stream_matches_wholefile_sharded(tmp_path):
+    path = _release_file(tmp_path)
+    ref = _reference(path, _sharded())
+    for cfg in (IngestConfig(chunk_chars=509, batch_entries=48),
+                IngestConfig(chunk_chars=1 << 20, batch_entries=64,
+                             queue_depth=0),
+                IngestConfig(chunk_chars=4096, batch_entries=32,
+                             parse_workers=2)):
+        st = _sharded()
+        rep = ingest_release(st, path, P, 1, label="r", config=cfg)
+        assert rep.n_entries == N
+        assert _digests(st) == _digests(ref)
+
+
+def test_stream_matches_wholefile_unsharded(tmp_path):
+    path = _release_file(tmp_path)
+    ref = _reference(path, VersionedStore("ing", P.schema(), capacity=512))
+    st = VersionedStore("ing", P.schema(), capacity=512)
+    ingest_release(st, path, P, 1, label="r",
+                   config=IngestConfig(chunk_chars=777, batch_entries=50))
+    assert _digests(st) == _digests(ref)
+
+
+def test_stream_second_release_churn(tmp_path):
+    """An incremental release (sequence churn) streams identically to the
+    whole-file update — exercises the updated-row fingerprint path."""
+    p1 = _release_file(tmp_path, seed=5)
+    p2 = _release_file(tmp_path, seed=5, churn=0.3)
+    ref = _reference(p2, _reference(p1, _sharded()), ts=2, label="r2")
+    st = _sharded()
+    cfg = IngestConfig(chunk_chars=2048, batch_entries=64)
+    ingest_release(st, p1, P, 1, label="r", config=cfg)
+    ingest_release(st, p2, P, 2, label="r2", config=cfg)
+    assert _digests(st) == _digests(ref)
+
+
+def test_stream_iterable_source():
+    ref = _sharded()
+    chunks = list(synth_uniprot_chunks(N, seed=7))
+    keys, table = P.parse_text("".join(chunks))
+    ref.update(1, keys, table, label="r")
+    st = _sharded()
+    ingest_release(st, iter(chunks), P, 1, label="r",
+                   config=IngestConfig(batch_entries=40))
+    assert _digests(st) == _digests(ref)
+
+
+class _Kill(Exception):
+    pass
+
+
+def _killer_at(k):
+    def hook(idx, n_entries, replayed):
+        if idx == k:
+            raise _Kill
+    return hook
+
+
+def test_resume_replays_only_remaining_chunks(tmp_path):
+    """Acceptance pin: kill at chunk k, reload from disk, resume — the
+    journaled chunks replay without re-parsing, only the tail is parsed,
+    and the store is byte-identical to an uninterrupted run."""
+    path = _release_file(tmp_path)
+    ref = _reference(path, _sharded())
+    sdir = os.path.join(str(tmp_path), "store")
+    jdir = os.path.join(str(tmp_path), "journal")
+    cfg = IngestConfig(chunk_chars=1 << 20, batch_entries=32)
+
+    st = _sharded()
+    st.save(sdir)
+    kill_at = 3
+    with pytest.raises(_Kill):
+        ingest_release(st, path, P, 1, label="r", config=cfg,
+                       journal_dir=jdir, store_dir=sdir,
+                       on_batch=_killer_at(kill_at))
+
+    st2 = ShardedStore.load(sdir)  # what a restarted process would see
+    rep = ingest_release(st2, path, P, 1, label="r", config=cfg,
+                         journal_dir=jdir, store_dir=sdir)
+    # chunks 0..kill_at were journaled before the kill landed
+    assert rep.chunks_replayed == kill_at + 1
+    assert rep.entries_replayed == (kill_at + 1) * cfg.batch_entries
+    assert rep.entries_parsed == N - rep.entries_replayed
+    assert rep.n_entries == N
+    assert _digests(st2) == _digests(ref)
+    # the journal is consumed and disk holds the finished release
+    assert not os.path.exists(os.path.join(jdir, "JOURNAL.json"))
+    assert _digests(ShardedStore.load(sdir)) == _digests(ref)
+
+
+def test_resume_already_committed(tmp_path, monkeypatch):
+    """A crash between the final save and journal cleanup must not
+    re-apply the release: the resume sees it committed and no-ops."""
+    from repro.ft.checkpoint import IngestJournal
+    path = _release_file(tmp_path)
+    sdir = os.path.join(str(tmp_path), "store")
+    jdir = os.path.join(str(tmp_path), "journal")
+    st = _sharded()
+    st.save(sdir)
+    monkeypatch.setattr(IngestJournal, "clear", lambda self: None)
+    cfg = IngestConfig(batch_entries=64)
+    ingest_release(st, path, P, 1, label="r", config=cfg,
+                   journal_dir=jdir, store_dir=sdir)
+    monkeypatch.undo()
+    before = _digests(st)
+    st2 = ShardedStore.load(sdir)
+    rep = ingest_release(st2, path, P, 1, label="r", config=cfg,
+                         journal_dir=jdir, store_dir=sdir)
+    assert rep.already_committed and rep.n_entries == 0
+    assert _digests(st2) == before
+    assert not os.path.exists(os.path.join(jdir, "JOURNAL.json"))
+
+
+def test_resume_refuses_dirty_store(tmp_path):
+    """Resuming with the killed (half-mutated, in-memory) store instead of
+    a fresh reload must refuse: its watermark no longer matches the
+    journal's pre-release pin."""
+    path = _release_file(tmp_path)
+    sdir = os.path.join(str(tmp_path), "store")
+    jdir = os.path.join(str(tmp_path), "journal")
+    st = _sharded()
+    st.save(sdir)
+    cfg = IngestConfig(batch_entries=32)
+    with pytest.raises(_Kill):
+        ingest_release(st, path, P, 1, label="r", config=cfg,
+                       journal_dir=jdir, store_dir=sdir,
+                       on_batch=_killer_at(2))
+    with pytest.raises(IngestResumeError):
+        ingest_release(st, path, P, 1, label="r", config=cfg,
+                       journal_dir=jdir, store_dir=sdir)
+
+
+def test_backpressure_pauses_waves(tmp_path):
+    path = _release_file(tmp_path)
+    level = {"v": 2.0}
+    seen = []
+
+    def pressure():
+        seen.append(level["v"])
+        v, level["v"] = level["v"], 0.0  # high once, then clears
+        return v
+
+    st = _sharded()
+    rep = ingest_release(
+        st, path, P, 1, label="r", pressure_fn=pressure,
+        config=IngestConfig(batch_entries=64, max_pressure=1.0,
+                            pressure_poll_s=0.001))
+    assert rep.backpressure_waits >= 1
+    assert rep.backpressure_wait_s > 0
+    assert rep.n_entries == N  # paced, not dropped
+    assert seen[0] == 2.0
+
+
+def test_ingest_observability(tmp_path):
+    """Counters/histogram advance per run; an aborted ingest leaves a
+    flight-recorder event carrying the active trace id."""
+    path = _release_file(tmp_path)
+    c_chunks = REGISTRY.counter("ingest.chunks_parsed")
+    c_entries = REGISTRY.counter("ingest.entries_routed")
+    h_wave = REGISTRY.histogram("ingest.wave_wall")
+    base = (c_chunks.value, c_entries.value, h_wave.n)
+    st = _sharded()
+    rep = ingest_release(st, path, P, 1, label="r",
+                         config=IngestConfig(batch_entries=64))
+    assert c_chunks.value - base[0] == rep.n_chunks
+    assert c_entries.value - base[1] == N
+    assert h_wave.n - base[2] == rep.n_chunks
+    assert h_wave.snapshot()["p99_ms"] >= h_wave.snapshot()["p50_ms"]
+
+    st2 = _sharded()
+    with pytest.raises(_Kill):
+        ingest_release(st2, path, P, 1, label="r",
+                       config=IngestConfig(batch_entries=64),
+                       on_batch=_killer_at(1))
+    ev = RECORDER.events("ingest_abort")[-1]
+    assert ev["store"] == "ing" and ev["chunks_applied"] == 2
+    assert ev.get("trace")  # the ingest span's trace id rode along
+
+
+def test_ingest_journal_checkpoint_counts(tmp_path):
+    path = _release_file(tmp_path)
+    jdir = os.path.join(str(tmp_path), "journal")
+    sdir = os.path.join(str(tmp_path), "store")
+    st = _sharded()
+    st.save(sdir)
+    c_ckpt = REGISTRY.counter("ingest.checkpoint_writes")
+    base = c_ckpt.value
+    rep = ingest_release(st, path, P, 1, label="r",
+                         config=IngestConfig(batch_entries=32),
+                         journal_dir=jdir, store_dir=sdir)
+    assert rep.checkpoint_writes == rep.n_chunks
+    assert c_ckpt.value - base == rep.n_chunks
+
+
+def test_stress_paced_ingest_with_concurrent_reads(tmp_path):
+    """Serving-style stress: a release streams in (forced-threaded waves +
+    flapping backpressure) while readers hammer the committed version.
+    Readers must only ever see the pre-release snapshot until finish()
+    publishes, and the final store must equal the whole-file reference."""
+    p1 = _release_file(tmp_path, seed=11)
+    p2 = _release_file(tmp_path, seed=11, churn=0.4)
+    ref = _reference(p2, _reference(p1, _sharded()), ts=2, label="r2")
+
+    st = _sharded()
+    ingest_release(st, p1, P, 1, label="r",
+                   config=IngestConfig(batch_entries=64))
+    v1 = st.get_versions([1])[0]
+    want = v1.values["sequence"].tobytes()
+
+    flap = {"i": 0}
+
+    def pressure():
+        flap["i"] += 1
+        return 2.0 if flap["i"] % 3 == 1 else 0.0
+
+    errs, stop = [], threading.Event()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                v = st.get_versions([1])[0]
+                if v.values["sequence"].tobytes() != want:
+                    errs.append("reader saw mutated pre-release view")
+                    return
+                time.sleep(0.001)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errs.append(repr(e))
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        cfg = IngestConfig(batch_entries=48, max_pressure=1.0,
+                           pressure_poll_s=0.001)
+        rep = ingest_release(st, p2, P, 2, label="r2",
+                             pressure_fn=pressure, config=cfg)
+        assert rep.backpressure_waits >= 1
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+    assert not errs, errs
+    assert _digests(st) == _digests(ref)
+    assert np.array_equal(st.get_versions([1])[0].values["sequence"],
+                          v1.values["sequence"])

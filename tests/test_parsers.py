@@ -1,5 +1,9 @@
-"""Format-parser roundtrips (paper §IV.B file formats)."""
+"""Format-parser roundtrips (paper §IV.B file formats) and streaming-split
+equivalence: chunked parses must be byte-identical to whole-file parses at
+ANY chunk boundary (the contract core/ingest.py rests on)."""
 import numpy as np
+import pytest
+from _hyp import given, settings, st
 
 from repro.core.parsers import (BlastTabParser, FastaParser, MgaParser,
                                 UniProtParser)
@@ -86,3 +90,102 @@ def test_mga_parse():
         "contig001|gene_1", "contig001|gene_2", "contig002|gene_1"]
     assert np.array_equal(table["coords"][0], [100, 400, 1])
     assert np.array_equal(table["coords"][1], [500, 800, -1])
+
+
+# -- streaming split equivalence ----------------------------------------------
+_STREAM_CASES = [
+    (FastaParser(seq_width=64, desc_width=32), FASTA),
+    (UniProtParser(seq_width=64), UNIPROT),
+    (BlastTabParser(), BLAST),
+    (MgaParser(), MGA),
+]
+_IDS = [type(p).__name__ for p, _ in _STREAM_CASES]
+
+
+def _split(text: str, size: int) -> list[str]:
+    return [text[i:i + size] for i in range(0, len(text), size)]
+
+
+def _whole(parser, text):
+    keys, table = parser.parse_text(text)
+    return keys, {n: v.tobytes() for n, v in table.items()}
+
+
+def _chunked(parser, chunks):
+    keys, rows = [], []
+    for k, r in parser.iter_records(chunks):
+        keys.append(k)
+        rows.append(r)
+    if not rows:
+        return [], {}
+    return keys, {n: v.tobytes()
+                  for n, v in parser.stack_rows(rows).items()}
+
+
+@pytest.mark.parametrize("parser,text", _STREAM_CASES, ids=_IDS)
+@pytest.mark.parametrize("size", [1, 2, 3, 7, 64, 1000])
+def test_chunk_split_byte_identical(parser, text, size):
+    """Every chunk size — down to one char, so every record straddles a
+    boundary — parses byte-identically to the whole file."""
+    assert _chunked(parser, _split(text, size)) == _whole(parser, text)
+
+
+@pytest.mark.parametrize("parser,text", [c for c in _STREAM_CASES
+                                         if not isinstance(c[0],
+                                                           BlastTabParser)],
+                         ids=[i for i in _IDS if i != "BlastTabParser"])
+def test_chunk_split_truncated_record(parser, text):
+    """A release cut off mid-record parses identically whole vs chunked —
+    the truncated final record is handled the same way in both paths."""
+    cut = text[:int(len(text) * 0.8)]
+    for size in (1, 5, 37):
+        assert _chunked(parser, _split(cut, size)) == _whole(parser, cut)
+
+
+def test_chunk_split_truncated_line_fails_identically():
+    """A tab-per-line record cut mid-line is malformed input: the whole
+    and chunked paths must reject it the same way (and the complete
+    records before the cut must be recoverable from the stream)."""
+    p = BlastTabParser()
+    cut = BLAST[:int(len(BLAST) * 0.8)]  # ends inside record 2
+    with pytest.raises(ValueError):
+        _whole(p, cut)
+    for size in (1, 5, 37):
+        with pytest.raises(ValueError):
+            _chunked(p, _split(cut, size))
+        entries = list(p.iter_entries_chunks(_split(cut, size)))
+        assert entries == list(p.iter_entries(cut))
+        assert entries[0] == BLAST.splitlines(keepends=True)[0]
+
+
+def test_chunk_split_leading_junk_dropped():
+    p = FastaParser(seq_width=64, desc_width=32)
+    noisy = "; stray comment\nnot a header\n" + FASTA
+    for size in (1, 4, 999):
+        assert _chunked(p, _split(noisy, size)) == _whole(p, noisy)
+
+
+def test_entry_offsets_are_resume_points():
+    """``iter_entries_with_offsets`` end offsets: re-feeding the text from
+    any entry's end offset yields exactly the remaining entries."""
+    p = UniProtParser(seq_width=64)
+    pairs = list(p.iter_entries_with_offsets(_split(UNIPROT, 11)))
+    entries = [e for e, _ in pairs]
+    assert entries == list(p.iter_entries(UNIPROT))
+    for i, (_, off) in enumerate(pairs):
+        rest = list(p.iter_entries(UNIPROT[off:]))
+        assert rest == entries[i + 1:]
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_chunk_split_property_random_boundaries(data):
+    """Property: ANY partition of the text into chunks — arbitrary uneven
+    sizes, empty chunks interleaved — parses byte-identically."""
+    parser, text = _STREAM_CASES[data.draw(
+        st.integers(0, len(_STREAM_CASES) - 1), label="case")]
+    cuts = sorted(data.draw(
+        st.lists(st.integers(0, len(text)), max_size=12), label="cuts"))
+    bounds = [0] + cuts + [len(text)]
+    chunks = [text[a:b] for a, b in zip(bounds, bounds[1:])]
+    assert _chunked(parser, chunks) == _whole(parser, text)

@@ -40,8 +40,11 @@ DEFAULT_TOLERANCE = 2.5
 #: built-in per-table overrides (CLI --table-tolerance wins): table9's
 #: end-to-end serving rows and table10's sub-millisecond instrumentation
 #: probes are the noisiest metrics in the suite on shared runners;
-#: table11's sweep rows depend on whether the autotune cache answered
-DEFAULT_TABLE_TOLERANCES = {"table9": 5.0, "table10": 5.0, "table11": 5.0}
+#: table11's sweep rows depend on whether the autotune cache answered;
+#: table12's end-to-end ingest walls swing with host core count (the
+#: engine changes pipeline mode on single-CPU runners)
+DEFAULT_TABLE_TOLERANCES = {"table9": 5.0, "table10": 5.0, "table11": 5.0,
+                            "table12": 5.0}
 
 
 def _table_of(name: str) -> str:
